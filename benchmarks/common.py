@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: CSV emission + the paper's ML tasks in
+synthetic form (offline container)."""
+
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+
+from repro.data.noniid import shard_partition
+from repro.data.synthetic import char_lm, cifar_like, mnist_like
+from repro.models.small import CNNTask, LSTMTask, MLPTask
+
+
+def emit(table: str, **fields) -> None:
+    """One CSV row: table,key=value,..."""
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"{table},{kv}")
+    sys.stdout.flush()
+
+
+@contextmanager
+def timed(table: str, **fields):
+    t0 = time.time()
+    yield
+    emit(table, seconds=round(time.time() - t0, 2), **fields)
+
+
+def mnist_task(n_clients=12, shards=3, seed=0, **kw):
+    data = mnist_like(n_train=1200, n_test=400, seed=seed)
+    part = shard_partition(data.y_train, n_clients, shards, seed=seed)
+    return MLPTask(data, part, hidden=32, local_steps=2, batch=32, **kw)
+
+
+def cifar_task(n_clients=10, shards=3, seed=0):
+    data = cifar_like(n_train=800, n_test=300, image=8, seed=seed)
+    part = shard_partition(data.y_train, n_clients, shards, seed=seed)
+    return CNNTask(data, part, channels=8, local_steps=2, batch=32)
+
+
+def shakespeare_task(n_clients=8, seed=0):
+    data = char_lm(num_roles=24, stream_len=512, test_len=2048, seed=seed)
+    return LSTMTask(data, n_clients, hidden=32, seq=24, local_steps=2,
+                    batch=8)

@@ -1,0 +1,23 @@
+"""Paper Fig. 12: asynchronous (per-client periods) vs synchronous
+(slowest-client paced) FedLay."""
+
+from __future__ import annotations
+
+from repro.core.dfl import run_method
+
+from .common import emit, mnist_task
+
+
+def run(quick: bool = False) -> None:
+    total = 25.0 if quick else 50.0
+    task = mnist_task()
+    for method, label in (("fedlay", "async"), ("fedlay-sync", "sync")):
+        res = run_method(method, task, total_time=total, model_bytes=4096,
+                         seed=0)
+        emit("fig12", mode=label, acc=round(res.final_mean_acc, 4),
+             local_steps=round(res.local_steps_per_client, 1),
+             msgs=round(res.messages_per_client, 1))
+
+
+if __name__ == "__main__":
+    run()

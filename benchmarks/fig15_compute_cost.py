@@ -1,0 +1,38 @@
+"""Paper Fig. 15: relative computation cost to reach a target accuracy
+(FedAvg normalized to 1)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dfl import run_method
+
+from .common import emit, mnist_task
+
+
+def _steps_to_reach(res, target: float):
+    for row in res.trace:
+        if row.mean_acc >= target:
+            return max(row.time, 1e-9)
+    return None
+
+
+def run(quick: bool = False) -> None:
+    total = 30.0 if quick else 60.0
+    task = mnist_task()
+    results = {m: run_method(m, task, total_time=total, model_bytes=4096,
+                             seed=0)
+               for m in ("fedavg", "fedlay", "gaia", "chord", "dfl-dds")}
+    # target: 95% of FedAvg's final accuracy
+    target = 0.95 * results["fedavg"].final_mean_acc
+    base = _steps_to_reach(results["fedavg"], target)
+    for m, res in results.items():
+        t = _steps_to_reach(res, target)
+        cost = None if (t is None or base is None) else round(t / base, 3)
+        emit("fig15", method=m, target_acc=round(target, 4),
+             time_to_target=round(t, 1) if t else "not_reached",
+             relative_cost=cost if cost else "inf")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 20: scalability — topology quality, correctness under
+construction, and per-client communication at n up to 1000 clients
+(large-scale simulation mode: topology + protocol, no per-client
+training, exactly like the paper's >100-client methodology)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import TOPOLOGY_REGISTRY
+from repro.core.metrics import evaluate_topology
+from repro.dist.sync import sync_bytes_per_client
+
+from .common import emit
+
+
+def run(quick: bool = False) -> None:
+    sizes = (100, 300) if quick else (100, 200, 500, 1000)
+    model_mb = 1.1  # paper's CNN model size
+    for n in sizes:
+        rep = evaluate_topology(TOPOLOGY_REGISTRY["fedlay"](n, 3))
+        emit("fig20_topology", n=n,
+             convergence_factor=round(rep.convergence_factor, 2),
+             diameter=rep.diameter,
+             aspl=round(rep.avg_shortest_path, 2))
+        for strategy in ("fedlay", "allreduce", "ring", "complete"):
+            mb = sync_bytes_per_client(strategy, int(model_mb * 1e6), n, 3)
+            emit("fig20_comm", n=n, strategy=strategy,
+                 mbytes_per_round_per_client=round(mb / 1e6, 2))
+
+
+if __name__ == "__main__":
+    run()

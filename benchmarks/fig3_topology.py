@@ -1,0 +1,35 @@
+"""Paper Fig. 3: convergence factor, diameter, average shortest path for
+FedLay vs Best-of-100-RRG vs Chord/Viceroy/Waxman/DT/social, n=300."""
+
+from __future__ import annotations
+
+from repro.core.baselines import TOPOLOGY_REGISTRY, best_of_rrgs
+from repro.core.metrics import evaluate_topology
+
+from .common import emit
+
+
+def run(n: int = 300, quick: bool = False) -> None:
+    degrees = (4, 6, 8) if quick else (4, 6, 8, 10, 12, 14)
+    trials = 20 if quick else 100
+    for d in degrees:
+        fed = evaluate_topology(TOPOLOGY_REGISTRY["fedlay"](n, d // 2))
+        best = evaluate_topology(best_of_rrgs(n, d, trials=trials))
+        for name, rep in (("fedlay", fed), ("best_rrg", best)):
+            emit("fig3", topology=name, n=n, degree=d,
+                 convergence_factor=round(rep.convergence_factor, 3),
+                 spectral_lambda=round(rep.spectral_lambda, 4),
+                 diameter=rep.diameter,
+                 avg_shortest_path=round(rep.avg_shortest_path, 3))
+    for name in ("chord", "viceroy", "waxman", "delaunay", "social",
+                 "ring", "grid2d", "torus", "hypercube"):
+        rep = evaluate_topology(TOPOLOGY_REGISTRY[name](n))
+        emit("fig3", topology=name, n=n, degree=round(rep.avg_degree, 1),
+             convergence_factor=round(rep.convergence_factor, 3),
+             spectral_lambda=round(rep.spectral_lambda, 4),
+             diameter=rep.diameter,
+             avg_shortest_path=round(rep.avg_shortest_path, 3))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONL files.
+
+  PYTHONPATH=src python -m benchmarks.report > results/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return []
+    rows = [json.loads(l) for l in open(path) if l.strip()]
+    # keep the last row per (arch, shape, opts) — reruns override
+    out = {}
+    for r in rows:
+        out[(r["arch"], r["shape"], r.get("opts", "baseline"))] = r
+    return sorted(out.values(),
+                  key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+
+
+def fmt(x, nd=2):
+    if x == 0:
+        return "0"
+    if abs(x) < 0.01:
+        return f"{x:.1e}"
+    return f"{x:,.{nd}f}"
+
+
+def dryrun_table(rows, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | attn | compile s | args GiB/dev | temp GiB/dev "
+          "| HLO GFLOP/dev | HBM GB/dev | wire GB/dev | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("opts", "baseline") != "baseline":
+            continue
+        cc = "+".join(f"{k}:{v}" for k, v in
+                      sorted(r["collective_counts"].items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['attn']} "
+              f"| {r['compile_s']} | {fmt(r['mem_args_gib'])} "
+              f"| {fmt(r['mem_temp_gib'])} "
+              f"| {fmt(r['flops_per_dev']/1e9, 0)} "
+              f"| {fmt(r['hbm_bytes_per_dev']/1e9, 1)} "
+              f"| {fmt(r['wire_bytes_per_dev']/1e9, 1)} | {cc} |")
+
+
+def roofline_table(rows):
+    print("\n### Roofline terms (single pod, per step, seconds)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant "
+          "| dom. frac | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("opts", "baseline") != "baseline":
+            continue
+        terms = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+                 "collective": r["t_collective_s"]}
+        dom = max(terms, key=terms.get)
+        frac = terms[dom] / max(sum(terms.values()), 1e-12)
+        print(f"| {r['arch']} | {r['shape']} | {fmt(terms['compute'], 3)} "
+              f"| {fmt(terms['memory'], 3)} | {fmt(terms['collective'], 3)} "
+              f"| **{dom}** | {frac:.2f} "
+              f"| {r['useful_flops_ratio']:.3f} |")
+
+
+def perf_table(paths):
+    print("\n### Perf variants\n")
+    print("| arch | shape | opts | t_compute | t_memory | t_collective "
+          "| temp GiB |")
+    print("|---|---|---|---|---|---|---|")
+    for path in paths:
+        for r in _load(path):
+            print(f"| {r['arch']} | {r['shape']} | {r.get('opts','baseline')} "
+                  f"| {fmt(r['t_compute_s'], 3)} | {fmt(r['t_memory_s'], 3)} "
+                  f"| {fmt(r['t_collective_s'], 3)} "
+                  f"| {fmt(r['mem_temp_gib'])} |")
+
+
+def main():
+    single = _load("results/dryrun_single.jsonl")
+    multi = _load("results/dryrun_multi.jsonl")
+    dryrun_table(single, "Dry-run — single pod 16x16 (256 chips), "
+                 "depth-probed costs")
+    dryrun_table(multi, "Dry-run — multi-pod 2x16x16 (512 chips), "
+                 "compile proof (rolled costs)")
+    roofline_table(single)
+    perf_table(["results/perf_llama.jsonl", "results/perf_deepseek.jsonl",
+                "results/perf_decode.jsonl"])
+
+
+if __name__ == "__main__":
+    main()

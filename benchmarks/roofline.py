@@ -1,0 +1,47 @@
+"""Roofline report (deliverable g): reads the dry-run JSONL and emits the
+three-term roofline per (arch × shape) — compute / memory / collective
+seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line
+what-would-move-it-down note per dominant term."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+NOTES = {
+    "compute": "raise arithmetic intensity: larger per-device batch or "
+               "fewer remat recomputes",
+    "memory": "cut HBM traffic: fuse attention/SSD blocks (Pallas kernels "
+              "keep tiles in VMEM), bf16 intermediates instead of f32",
+    "collective": "cut wire bytes: bf16 collectives, reduce-scatter + "
+                  "sequence-parallel instead of per-layer all-reduce, or "
+                  "FedLay 2L-permute sync instead of global all-reduce",
+}
+
+
+def run(path: str = "results/dryrun_single.jsonl", quick: bool = False) -> None:
+    if not os.path.exists(path):
+        emit("roofline", error=f"missing {path} (run repro.launch.dryrun)")
+        return
+    rows = [json.loads(l) for l in open(path) if l.strip()]
+    for r in rows:
+        terms = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+                 "collective": r["t_collective_s"]}
+        dom = max(terms, key=terms.get)
+        bound_frac = terms[dom] / max(sum(terms.values()), 1e-12)
+        emit("roofline", arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+             attn=r["attn"],
+             t_compute_s=round(terms["compute"], 4),
+             t_memory_s=round(terms["memory"], 4),
+             t_collective_s=round(terms["collective"], 4),
+             dominant=dom,
+             dominant_frac=round(bound_frac, 3),
+             useful_flops_ratio=round(r["useful_flops_ratio"], 3),
+             mem_temp_gib=r["mem_temp_gib"],
+             note=NOTES[dom].replace(",", ";"))
+
+
+if __name__ == "__main__":
+    run()

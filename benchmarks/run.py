@@ -1,0 +1,66 @@
+"""Benchmark harness front door — one module per paper table/figure plus
+the roofline and the beyond-paper collective comparison.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig8]
+
+Default is quick mode (CPU-friendly); --full reproduces the paper-scale
+settings.  Output: CSV rows ``table,key=value,...``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (crosspod, fig3_topology, fig8_churn, fig11_noniid,
+               fig12_async, fig13_locality, fig15_compute_cost,
+               fig16_confidence, fig18_churn_accuracy, fig20_scalability,
+               roofline, sync_collectives, table3_accuracy)
+
+MODULES = {
+    "fig3": fig3_topology,
+    "fig8": fig8_churn,
+    "table3": table3_accuracy,
+    "fig11": fig11_noniid,
+    "fig12": fig12_async,
+    "fig13": fig13_locality,
+    "fig15": fig15_compute_cost,
+    "fig16": fig16_confidence,
+    "fig18": fig18_churn_accuracy,
+    "fig20": fig20_scalability,
+    "roofline": roofline,
+    "sync_collectives": sync_collectives,
+    "crosspod": crosspod,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+
+    names = list(MODULES) if not args.only else args.only.split(",")
+    failures = []
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.run(quick=not args.full)
+        except Exception:  # noqa: BLE001 — keep the harness going
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

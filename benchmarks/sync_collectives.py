@@ -1,0 +1,71 @@
+"""Beyond-paper table: FedLay-as-gradient-sync vs all-reduce on the TPU
+path — compiled wire bytes of one DFL round at several client counts,
+measured from the HLO of the actual shard_map programs (8 host devices,
+subprocess so the parent jax stays single-device)."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import emit
+
+_PROBE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax import shard_map
+    from repro.core.mixing import build_permute_schedule
+    from repro.dist.sync import make_mixer
+    from repro.launch.hlo_stats import collective_stats
+
+    n, dim = 8, 1_000_000
+    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    out = {}
+    for strategy in ("fedlay", "allreduce", "ring"):
+        sched = build_permute_schedule(n, 3)
+        mixer = make_mixer(strategy, sched, "data", n)
+
+        def body(x, w, s):
+            return mixer({"m": x}, w, s)["m"]
+
+        f = jax.jit(shard_map(body, mesh=mesh,
+                              in_specs=(P("data"), P("data"), P("data")),
+                              out_specs=P("data"), check_vma=False))
+        lowered = f.lower(
+            jax.ShapeDtypeStruct((n, dim), jnp.float32),
+            jax.ShapeDtypeStruct((n, 6), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32))
+        hlo = lowered.compile().as_text()
+        st = collective_stats(hlo)
+        out[strategy] = {"wire_bytes_per_dev": st.wire_bytes_per_device,
+                         "counts": st.counts}
+    print(json.dumps(out))
+""")
+
+
+def run(quick: bool = False) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _PROBE], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if res.returncode != 0:
+        emit("sync_collectives", error=res.stderr[-300:].replace(",", ";")
+             .replace("\n", " "))
+        return
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    for strategy, row in data.items():
+        emit("sync_collectives", strategy=strategy, clients=8,
+             model_mb=4.0,
+             wire_mb_per_dev=round(row["wire_bytes_per_dev"] / 1e6, 2),
+             ops="+".join(f"{k}:{v}" for k, v in row["counts"].items()))
+
+
+if __name__ == "__main__":
+    run()

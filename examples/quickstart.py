@@ -1,0 +1,58 @@
+"""Quickstart: the FedLay overlay in 60 seconds.
+
+Builds a FedLay overlay from virtual coordinates, scores it against the
+paper's three topology metrics, runs the decentralized join/failure
+protocols, and does a miniature DFL training round — all pure host-side
+(no accelerator needed).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (NodeAddress, Simulator, TOPOLOGY_REGISTRY,
+                        evaluate_topology, fedlay_topology)
+from repro.core.dfl import run_method
+from repro.data.noniid import shard_partition
+from repro.data.synthetic import mnist_like
+from repro.models.small import MLPTask
+
+
+def main():
+    # 1. The FedLay topology: L random ring spaces -> near-random regular
+    n, L = 100, 3
+    addrs = [NodeAddress.create(i, num_spaces=L) for i in range(n)]
+    topo = fedlay_topology(addrs)
+    rep = evaluate_topology(topo)
+    print(f"FedLay n={n} L={L}: degree≤{2*L}, "
+          f"λ={rep.spectral_lambda:.3f}, c_G={rep.convergence_factor:.2f}, "
+          f"diameter={rep.diameter}, aspl={rep.avg_shortest_path:.2f}")
+    ring = evaluate_topology(TOPOLOGY_REGISTRY["ring"](n))
+    print(f"ring baseline:  c_G={ring.convergence_factor:.2f} "
+          f"(FedLay mixes {ring.convergence_factor/rep.convergence_factor:.0f}x faster)")
+
+    # 2. Decentralized construction + churn recovery (NDMP)
+    sim = Simulator(num_spaces=L, latency=0.35)
+    sim.seed_network(list(range(50)))
+    for j in range(50, 60):
+        sim.join(j, bootstrap=j % 50)
+    sim.run_for(10.0)
+    print(f"after 10 concurrent joins: correctness={sim.correctness():.3f}")
+    for f in range(5):
+        sim.fail(f)
+    sim.run_for(20.0)
+    print(f"after 5 abrupt failures:   correctness={sim.correctness():.3f}")
+
+    # 3. A miniature DFL run (MEP confidence weighting, async periods)
+    data = mnist_like(n_train=800, n_test=300)
+    part = shard_partition(data.y_train, num_clients=10, shards_per_client=3)
+    task = MLPTask(data, part, hidden=32, local_steps=2)
+    res = run_method("fedlay", task, total_time=20.0, model_bytes=4096)
+    print(f"DFL on non-iid shards: acc {res.trace[0].mean_acc:.2f} -> "
+          f"{res.final_mean_acc:.2f} "
+          f"({res.messages_per_client:.0f} msgs/client, "
+          f"{res.suppressed_sends} duplicate sends suppressed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving demo: greedy decode with per-layer KV / SSM caches
+against a reduced variant of any assigned architecture.
+
+  PYTHONPATH=src python examples/serve_demo.py --arch mamba2-370m
+  PYTHONPATH=src python examples/serve_demo.py --arch deepseek-v3-671b
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "mamba2-370m", "--batch", "2",
+                     "--prompt-len", "16", "--gen", "16"]
+    sys.exit(main())

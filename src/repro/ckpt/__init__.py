@@ -1,0 +1,3 @@
+from .checkpoint import CheckpointManager, load, save
+
+__all__ = ["CheckpointManager", "load", "save"]

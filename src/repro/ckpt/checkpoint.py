@@ -1,0 +1,129 @@
+"""Checkpointing: pytree → (npz arrays + json treedef) on local disk.
+
+Simple, dependency-free, and exact: arbitrary nested dict/list/tuple
+pytrees of jnp/np arrays round-trip including dtypes (bf16 stored as
+uint16 views).  Supports step-numbered checkpoints with ``latest()``
+discovery and retention.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree, prefix="") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_flatten_with_paths(tree[k], f"{prefix}/{k}"))
+        return out
+    if isinstance(tree, (list, tuple)):
+        out = []
+        for i, v in enumerate(tree):
+            out.extend(_flatten_with_paths(v, f"{prefix}/#{i}"))
+        return out
+    return [(prefix, tree)]
+
+
+def _treedef(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict", "keys": {k: _treedef(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple", "items": [_treedef(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list", "items": [_treedef(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(defn, leaves: Dict[str, np.ndarray], prefix=""):
+    kind = defn["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, leaves, f"{prefix}/{k}")
+                for k, v in defn["keys"].items()}
+    if kind in ("tuple", "list"):
+        items = [_rebuild(v, leaves, f"{prefix}/#{i}")
+                 for i, v in enumerate(defn["items"])]
+        return tuple(items) if kind == "tuple" else items
+    return leaves[prefix]
+
+
+def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays, dtypes = {}, {}
+    for name, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[name] = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[name] = arr
+    np.savez(path + ".npz", **{k.replace("/", "|"): v for k, v in arrays.items()})
+    with open(path + ".json", "w") as f:
+        json.dump({"treedef": _treedef(tree), "dtypes": dtypes,
+                   "metadata": metadata or {}}, f)
+
+
+def load(path: str) -> Tuple[Any, dict]:
+    with open(path + ".json") as f:
+        spec = json.load(f)
+    with np.load(path + ".npz") as z:
+        leaves = {}
+        for k in z.files:
+            name = k.replace("|", "/")
+            arr = z[k]
+            if spec["dtypes"][name] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            leaves[name] = arr
+    return _rebuild(spec["treedef"], leaves), spec["metadata"]
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}")
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
+        meta = dict(metadata or {})
+        meta["step"] = step
+        save(self._path(step), tree, meta)
+        self._retain()
+        return self._path(step)
+
+    def steps(self) -> List[int]:
+        out = []
+        for f in os.listdir(self.directory):
+            m = re.match(r"ckpt_(\d+)\.json$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: Optional[int] = None) -> Tuple[Any, dict]:
+        step = self.latest() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return load(self._path(step))
+
+    def _retain(self) -> None:
+        for s in self.steps()[:-self.keep]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(self._path(s) + ext)
+                except OSError:
+                    pass

@@ -1,0 +1,30 @@
+# The paper's primary contribution: the FedLay overlay network for
+# decentralized federated learning — topology, metrics, NDMP control
+# protocols, MEP model-exchange protocol, mixing schedules, and the DFL
+# training engines used in the paper's evaluation.
+
+from .coords import NodeAddress, circular_distance, coordinate, coordinates
+from .topology import Topology, correctness, fedlay_topology, ring_orders
+from .metrics import (TopologyReport, convergence_factor, evaluate_topology,
+                      metropolis_hastings_matrix, spectral_lambda)
+from .baselines import TOPOLOGY_REGISTRY
+from .ndmp import Simulator
+from .mep import (ClientProfile, FingerprintTable, aggregation_weights,
+                  data_confidence, link_period, model_fingerprint)
+from .mixing import (PermuteSchedule, build_permute_schedule,
+                     confidence_mixing_matrix, gossip_step,
+                     schedule_mixing_matrix)
+from .dfl import RunResult, capacity_periods, run_gossip, run_method
+
+__all__ = [
+    "NodeAddress", "circular_distance", "coordinate", "coordinates",
+    "Topology", "correctness", "fedlay_topology", "ring_orders",
+    "TopologyReport", "convergence_factor", "evaluate_topology",
+    "metropolis_hastings_matrix", "spectral_lambda",
+    "TOPOLOGY_REGISTRY", "Simulator",
+    "ClientProfile", "FingerprintTable", "aggregation_weights",
+    "data_confidence", "link_period", "model_fingerprint",
+    "PermuteSchedule", "build_permute_schedule", "confidence_mixing_matrix",
+    "gossip_step", "schedule_mixing_matrix",
+    "RunResult", "capacity_periods", "run_gossip", "run_method",
+]

@@ -1,0 +1,120 @@
+"""Virtual coordinates and circular distance (paper §II-C, Definition 2).
+
+Every FedLay node derives an L-dimensional virtual coordinate vector
+``⟨x_1, .., x_L⟩`` with each ``x_i ∈ [0, 1)``.  The paper computes
+``x_i = H(IP_x | i)`` for a public hash function H; we use the stable
+64-bit FNV-1a hash of ``"{node_id}|{i}"`` mapped into [0, 1), which has
+the same uniformity / determinism properties and works for arbitrary
+node identifiers (IP strings, integers, mesh indices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def _fmix64(h: int) -> int:
+    """Murmur3 64-bit finalizer — full avalanche so that inputs differing
+    in one trailing byte (e.g. "7|0" vs "7|1") map to independent points."""
+    h ^= h >> 33
+    h = (h * 0xFF51AFD7ED558CCD) & _MASK64
+    h ^= h >> 33
+    h = (h * 0xC4CEB9FE1A85EC53) & _MASK64
+    h ^= h >> 33
+    return h
+
+
+def fnv1a_64(data: bytes) -> int:
+    """Stable 64-bit hash (FNV-1a + murmur finalizer), deterministic
+    across runs and platforms (the paper's "publicly known hash H")."""
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return _fmix64(h)
+
+
+def coordinate(node_id: object, space: int, salt: str = "") -> float:
+    """The node's virtual coordinate in ring space ``space`` (paper: H(IP|i)).
+
+    Returns a float in [0, 1).  ``salt`` lets tests / simulations draw
+    independent coordinate systems for repeated trials.
+    """
+    h = fnv1a_64(f"{salt}{node_id}|{space}".encode())
+    return (h >> 11) / float(1 << 53)  # 53-bit mantissa-exact uniform
+
+
+def coordinates(node_id: object, num_spaces: int, salt: str = "") -> tuple:
+    """The full L-dimensional coordinate vector of a node."""
+    return tuple(coordinate(node_id, i, salt) for i in range(num_spaces))
+
+
+def circular_distance(x: float, y: float) -> float:
+    """Definition 2: CD(x, y) = min(|x - y|, 1 - |x - y|).
+
+    The length of the smaller arc between two ring positions, with the
+    ring perimeter normalized to 1.
+    """
+    d = abs(x - y)
+    return min(d, 1.0 - d)
+
+
+def ccw_arc(src: float, dst: float) -> float:
+    """Arc length travelling counterclockwise (decreasing coordinate,
+    wrapping 0 → 1) from ``src`` to ``dst``.
+
+    We adopt the convention that coordinates increase clockwise, so the
+    counterclockwise arc from x to y has length ``(x - y) mod 1``.
+    """
+    return (src - dst) % 1.0
+
+
+def cw_arc(src: float, dst: float) -> float:
+    """Arc length travelling clockwise (increasing coordinate) src → dst."""
+    return (dst - src) % 1.0
+
+
+def closer(x: float, y: float, target: float, tie_x: int = 0, tie_y: int = 0) -> bool:
+    """True iff x is strictly closer to ``target`` than y on the ring.
+
+    Ties in circular distance are broken by the smaller tie value
+    (paper: smaller IP address wins), so exactly one node is closest to
+    any coordinate.
+    """
+    dx, dy = circular_distance(x, target), circular_distance(y, target)
+    if dx != dy:
+        return dx < dy
+    return tie_x < tie_y
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeAddress:
+    """Identity + coordinates of a FedLay node.
+
+    ``node_id`` doubles as the paper's IP address for tie-breaking: it
+    must be orderable and unique.
+    """
+
+    node_id: int
+    coords: tuple
+
+    @property
+    def num_spaces(self) -> int:
+        return len(self.coords)
+
+    @classmethod
+    def create(cls, node_id: int, num_spaces: int, salt: str = "") -> "NodeAddress":
+        return cls(node_id=node_id, coords=coordinates(node_id, num_spaces, salt))
+
+
+def ring_order(addrs: Sequence[NodeAddress], space: int) -> list:
+    """Node ids sorted by coordinate in ``space`` (clockwise ring order).
+
+    Identical coordinates are ordered by node id (the paper's IP-address
+    tie-break)."""
+    return [a.node_id for a in sorted(addrs, key=lambda a: (a.coords[space], a.node_id))]

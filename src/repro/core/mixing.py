@@ -1,0 +1,216 @@
+"""Mixing-matrix construction and the static ``ppermute`` schedule.
+
+Two consumers:
+
+* the **simulation path** (`repro.core.dfl`) applies the row-stochastic
+  confidence-weighted mixing matrix to stacked client models, and
+* the **TPU path** (`repro.dist.sync`) compiles the same FedLay overlay
+  into 2L static ring rotations: each virtual ring space is a cyclic
+  order over the mesh's data positions, so one space = one ``ppermute``
+  rotation in each direction.  Confidence weights and duplicate-
+  adjacency masks (a peer adjacent in several spaces is counted once —
+  the bulk-synchronous image of MEP fingerprint dedup) are precomputed
+  host-side into dense per-device weight tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .coords import NodeAddress, coordinate
+from .mep import ClientProfile, aggregation_weights
+from .topology import Topology, fedlay_topology, ring_orders
+
+
+# --------------------------------------------------------------------------
+# Confidence-weighted mixing matrix (simulation path)
+# --------------------------------------------------------------------------
+
+def confidence_mixing_matrix(topology: Topology,
+                             profiles: Dict[int, ClientProfile],
+                             alpha_d: float = 0.5, alpha_c: float = 0.5,
+                             confidence_weighted: bool = True) -> np.ndarray:
+    """Row i = MEP aggregation weights of client i over {i} ∪ N_i.
+
+    Row-stochastic by construction.  With ``confidence_weighted=False``
+    this is the DFedAvg simple average (the paper's ablation)."""
+    index = {u: k for k, u in enumerate(topology.nodes)}
+    n = topology.n
+    W = np.zeros((n, n), dtype=np.float64)
+    nbrs = topology.neighbor_map()
+    for u in topology.nodes:
+        others = nbrs[u]
+        w = aggregation_weights(profiles[u], [profiles[v] for v in others],
+                                alpha_d, alpha_c, confidence_weighted)
+        W[index[u], index[u]] = w[0]
+        for k, v in enumerate(others):
+            W[index[u], index[v]] = w[k + 1]
+    return W
+
+
+def gossip_step(stacked_models: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """One synchronous mixing round: X ← W·X for (n, dim) stacked models."""
+    return W @ stacked_models
+
+
+# --------------------------------------------------------------------------
+# Static ppermute schedule (TPU path)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PermuteSchedule:
+    """Everything `repro.dist.sync.fedlay_mix` needs, all host-side static.
+
+    ``perms[k]`` is the source-permutation of the k-th incoming slot:
+    device ``i`` receives the model held by device ``perms[k][i]``.
+    Slots come in (space, direction) order: (0,cw),(0,ccw),(1,cw)...
+    ``weights[i, k]`` is the MEP confidence weight of that incoming
+    model at device ``i`` — already zeroed for duplicate adjacencies and
+    self-loops — and ``self_weight[i]`` is c_i.  Rows are normalized so
+    ``self_weight[i] + Σ_k weights[i,k] == 1``.
+    """
+
+    num_clients: int
+    num_spaces: int
+    perms: Tuple[Tuple[int, ...], ...]        # (2L, n) source index per device
+    weights: np.ndarray                       # (n, 2L) float32
+    self_weight: np.ndarray                   # (n,) float32
+
+    def ppermute_pairs(self, slot: int) -> List[Tuple[int, int]]:
+        """(src, dst) pairs for jax.lax.ppermute for one incoming slot."""
+        return [(src, dst) for dst, src in enumerate(self.perms[slot])]
+
+    @property
+    def num_slots(self) -> int:
+        return 2 * self.num_spaces
+
+
+def build_permute_schedule(num_clients: int, num_spaces: int,
+                           profiles: Optional[Dict[int, ClientProfile]] = None,
+                           alpha_d: float = 0.5, alpha_c: float = 0.5,
+                           confidence_weighted: bool = True,
+                           salt: str = "",
+                           pod_bias: Optional[int] = None,
+                           pod_bias_spaces: Optional[int] = None) -> PermuteSchedule:
+    """Compile a FedLay overlay over mesh data positions 0..n-1 into the
+    2L-rotation ``ppermute`` schedule.
+
+    Client identity = flattened mesh (pod, data) index; coordinates are
+    hashed from it exactly as the paper hashes IP addresses.
+
+    ``pod_bias`` (beyond-paper, §Perf): with P pods of n/P clients each,
+    coordinates become ``(pod(i) + H(i|s)) / P`` — each virtual ring
+    orders clients pod-by-pod, so exactly P of its n edges cross a pod
+    boundary instead of the ≈ n·(P−1)/P of unbiased random coordinates.
+    Within a pod the order is still hash-random, so intra-pod mixing
+    keeps the near-RRG property; cross-pod mixing degrades to a ring
+    over pods, trading a slightly larger λ for an O(n/P)× reduction in
+    inter-pod ICI traffic.
+    """
+    n = num_clients
+    if pod_bias:
+        assert n % pod_bias == 0
+        per = n // pod_bias
+        nb = num_spaces if pod_bias_spaces is None else pod_bias_spaces
+
+        def coord(i: int, s: int) -> float:
+            u = coordinate(i, s, salt)
+            if s < nb:          # pod-contiguous ring
+                return (i // per + u) / pod_bias
+            return u            # fully random ring (mixing quality)
+
+        addrs = [NodeAddress(node_id=i, coords=tuple(
+            coord(i, s) for s in range(num_spaces))) for i in range(n)]
+    else:
+        addrs = [NodeAddress.create(i, num_spaces, salt) for i in range(n)]
+    orders = ring_orders(addrs)  # per space: clockwise id order
+
+    # incoming source per device per slot
+    perms: List[Tuple[int, ...]] = []
+    senders = np.zeros((n, 2 * num_spaces), dtype=np.int64)
+    for s in range(num_spaces):
+        order = orders[s]
+        pos = {u: k for k, u in enumerate(order)}
+        succ = [0] * n
+        pred = [0] * n
+        for u in range(n):
+            succ[u] = order[(pos[u] + 1) % n]
+            pred[u] = order[(pos[u] - 1) % n]
+        # slot 2s: receive from clockwise predecessor; slot 2s+1: successor
+        perms.append(tuple(pred))
+        perms.append(tuple(succ))
+        senders[:, 2 * s] = pred
+        senders[:, 2 * s + 1] = succ
+
+    # confidence weights with duplicate-adjacency masking
+    topo = fedlay_topology(addrs)
+    nbr_map = topo.neighbor_map()
+    if profiles is None:
+        profiles = {
+            i: ClientProfile(client_id=i, period=1.0,
+                             label_histogram=np.ones(2))
+            for i in range(n)
+        }
+    weights = np.zeros((n, 2 * num_spaces), dtype=np.float64)
+    self_w = np.zeros((n,), dtype=np.float64)
+    for i in range(n):
+        others = nbr_map[i]
+        w = aggregation_weights(profiles[i], [profiles[v] for v in others],
+                                alpha_d, alpha_c, confidence_weighted)
+        self_w[i] = w[0]
+        per_peer = {v: w[k + 1] for k, v in enumerate(others)}
+        seen: set = set()
+        for k in range(2 * num_spaces):
+            src = int(senders[i, k])
+            if src == i or src in seen:
+                weights[i, k] = 0.0  # self-ring (n small) or duplicate adjacency
+            else:
+                weights[i, k] = per_peer[src]
+                seen.add(src)
+    total = self_w + weights.sum(axis=1)
+    weights /= total[:, None]
+    self_w /= total
+    return PermuteSchedule(
+        num_clients=n, num_spaces=num_spaces,
+        perms=tuple(perms),
+        weights=weights.astype(np.float32),
+        self_weight=self_w.astype(np.float32),
+    )
+
+
+def schedule_mixing_matrix(sched: PermuteSchedule) -> np.ndarray:
+    """Dense equivalent W of a permute schedule (for tests: the TPU path
+    and the simulation path must agree)."""
+    n = sched.num_clients
+    W = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        W[i, i] = sched.self_weight[i]
+        for k in range(sched.num_slots):
+            src = sched.perms[k][i]
+            W[i, src] += float(sched.weights[i, k])
+    return W
+
+
+def cross_pod_messages(sched: PermuteSchedule, pods: int) -> int:
+    """Messages per mixing round that cross a pod boundary (clients are
+    laid out pod-contiguously: pod(i) = i // (n/pods))."""
+    n = sched.num_clients
+    per = n // pods
+    crossing = 0
+    for k in range(sched.num_slots):
+        for dst, src in enumerate(sched.perms[k]):
+            if src // per != dst // per:
+                crossing += 1
+    return crossing
+
+
+def multirate_participation(periods: Sequence[float], step: int) -> np.ndarray:
+    """Bulk-synchronous image of MEP asynchrony: client u participates in
+    the mixing collective at step t iff t % k_u == 0, where k_u is its
+    period expressed in (integer) local steps.  Returns a 0/1 mask."""
+    base = min(periods)
+    mult = np.maximum(1, np.round(np.asarray(periods) / base).astype(np.int64))
+    return (step % mult == 0).astype(np.float32)

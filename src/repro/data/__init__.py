@@ -1,0 +1,10 @@
+from .noniid import (Partition, biased_locality_partition, iid_partition,
+                     shard_partition)
+from .synthetic import (CharLMData, ClassificationData, char_lm, cifar_like,
+                        mnist_like, token_batches)
+
+__all__ = [
+    "Partition", "biased_locality_partition", "iid_partition",
+    "shard_partition", "CharLMData", "ClassificationData", "char_lm",
+    "cifar_like", "mnist_like", "token_batches",
+]

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical compute layers, with pure-jnp
+# oracles in ref.py and jit'd wrappers in ops.py (interpret=True on CPU).
+
+from .ops import flash_decode, ssd_scan, weighted_mix
+from . import ref
+
+__all__ = ["flash_decode", "ssd_scan", "weighted_mix", "ref"]

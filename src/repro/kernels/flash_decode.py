@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: single-token GQA flash-decode attention.
+
+The serving hot spot for ``decode_32k`` / ``long_500k``: one query token
+per sequence against a (L, Hkv, hd) KV cache.  Memory-bound — the whole
+cache streams through VMEM once; the online-softmax accumulator lives in
+VMEM scratch so nothing O(L) is ever written back to HBM:
+
+  HBM traffic = 2 · L · hd · sizeof(dtype) per (batch, kv-head)  (optimal)
+
+Grid: (B, Hkv, L/BL) with the L dimension innermost (sequential):
+scratch m/l/acc carry across L blocks; the (G, hd) output tile is
+written once on the last block.  BL is lane-aligned (multiples of 128);
+the q·Kᵀ and p·V contractions are (G, hd)×(hd, BL) and (G, BL)×(BL, hd)
+matmuls that feed the MXU when G ≥ 8 — exactly the GQA regime of the
+assigned architectures.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(nblocks, block_l, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   m_s, l_s, acc_s):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BL, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)                                 # (G, BL)
+
+    # validity: absolute slot index <= pos (prefix-cache semantics)
+    pos = pos_ref[0, 0]
+    idx = li * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx <= pos, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_s[...], l_s[...], acc_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))   # (G, 1)
+    p = jnp.exp(s - m_new)                                        # (G, BL)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_s[...], l_s[...], acc_s[...] = m_new, l_new, acc_new
+
+    @pl.when(li == nblocks - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 pos: jnp.ndarray, block_l: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, hd); caches: (B, L, Hkv, hd); pos: scalar int32.
+
+    Returns (B, Hq, hd).  Slots with index > pos are masked (prefix
+    semantics; ring-buffer windows pass pos = L-1 once the buffer is
+    full).  L is padded to a block multiple internally.
+    """
+    B, Hq, hd = q.shape
+    _, L, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    bl = min(block_l, L)
+    pad = (-L) % bl
+    if pad:
+        zk = jnp.zeros((B, pad, Hkv, hd), k_cache.dtype)
+        k_cache = jnp.concatenate([k_cache, zk], axis=1)
+        v_cache = jnp.concatenate([v_cache, zk], axis=1)
+    Lp = k_cache.shape[1]
+    nblocks = Lp // bl
+
+    qg = q.reshape(B, Hkv, G, hd)
+    kc = k_cache.transpose(0, 2, 1, 3)                   # (B, Hkv, Lp, hd)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    pos2 = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+
+    kern = functools.partial(_decode_kernel, nblocks, bl)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, l: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bl, hd), lambda b, h, l: (b, h, l, 0)),
+            pl.BlockSpec((1, 1, bl, hd), lambda b, h, l: (b, h, l, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, l: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, l: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kc, vc, pos2)
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,44 @@
+"""jit'd front doors for the Pallas kernels.
+
+``interpret`` defaults to auto: real TPU → compiled kernel; anything
+else (this CPU container, tests) → ``interpret=True``, which executes
+the kernel body in Python per grid cell — bit-accurate to the lowered
+semantics, so the sweep tests validate the real kernel logic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_decode import flash_decode as _flash_decode
+from .ssd_scan import ssd_scan as _ssd_scan
+from .weighted_mix import weighted_mix as _weighted_mix
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def weighted_mix(models, weights, block_n: int = 65536,
+                 interpret: bool | None = None):
+    interp = _auto_interpret() if interpret is None else interpret
+    return _weighted_mix(models, weights, block_n=block_n, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def flash_decode(q, k_cache, v_cache, pos, block_l: int = 512,
+                 interpret: bool | None = None):
+    interp = _auto_interpret() if interpret is None else interpret
+    return _flash_decode(q, k_cache, v_cache, pos, block_l=block_l,
+                         interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 256,
+             interpret: bool | None = None):
+    interp = _auto_interpret() if interpret is None else interpret
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interp)

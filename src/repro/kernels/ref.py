@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel — the ground truth the
+shape/dtype sweep tests assert against (``interpret=True`` kernel vs
+these references, ``assert_allclose``)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_mix_ref(models: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """models (K, N), weights (K,) → Σ_k w_k·models_k, in models.dtype."""
+    acc = jnp.sum(models.astype(jnp.float32)
+                  * weights.astype(jnp.float32)[:, None], axis=0)
+    return acc.astype(models.dtype)
+
+
+def flash_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos) -> jnp.ndarray:
+    """q (B, Hq, hd) vs caches (B, L, Hkv, hd), prefix-valid ≤ pos."""
+    B, Hq, hd = q.shape
+    L, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, k_cache.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    valid = jnp.arange(L) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """Sequential SSD recurrence (the definitionally-correct oracle).
+
+    x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N) → y (B,S,H,P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs           # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * A[None, :])     # (B,H)
+        dbx = jnp.einsum("bhp,bn,bh->bhpn", xt, bt, dtt)
+        state = state * da[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

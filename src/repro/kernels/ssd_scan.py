@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (state-space duality).
+
+One (batch, head) pair per grid row; the chunk dimension is the
+innermost (sequential) grid axis with the (P, N) recurrent state carried
+in VMEM scratch.  Per chunk the kernel does exactly the SSD dual-form
+work — three small matmuls on the MXU:
+
+  scores  = (C·Bᵀ) ∘ L          (Q×Q, decay-masked)
+  y_intra = scores · (dt∘x)     (Q×P)
+  y_inter = (C·state) ∘ exp(cs) (Q×P)
+  state'  = decay·state + Bᵀ·(dt∘exp(cs_end−cs)∘x)   (N×P → kept (P,N))
+
+Q (chunk) and P (headdim) are 64/128-aligned so every contraction lands
+on the MXU; VMEM per grid cell is O(Q·(P+N) + Q² + P·N) — a few hundred
+KiB at the assigned sizes (Q=256, P=64..128, N=128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(nchunks, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref,
+                state_s):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)             # (Q, 1)
+    a = a_ref[0, 0, 0, 0]                                # scalar A (negative)
+    bm = b_ref[0, 0].astype(jnp.float32)                 # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)                 # (Q, N)
+
+    da = dt * a                                          # (Q, 1) log-decay
+    cs = jnp.cumsum(da, axis=0)                          # (Q, 1) inclusive
+    xdt = x * dt                                         # (Q, P)
+
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for j <= i
+    seg = cs - cs.T                                      # (Q, Q)
+    q = seg.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    seg = jnp.where(jj <= ii, seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * decay
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_s[...]                                 # (P, N)
+    y += jnp.exp(cs) * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Q, P)
+
+    # state update: state' = exp(cs_end)·state + Σ_j w_j · x_j ⊗ B_j
+    w = jnp.exp(cs[-1:] - cs)                            # (Q, 1) decay to end
+    new_state = jnp.exp(cs[-1, 0]) * state + jax.lax.dot_general(
+        xdt * w, bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (P, N)
+    state_s[...] = new_state
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int = 256,
+             interpret: bool = False) -> jnp.ndarray:
+    """x: (B, S, H, P); dt: (B, S, H) post-softplus; A: (H,) negative;
+    Bm/Cm: (B, S, N) single-group.  Returns y (B, S, H, P).
+
+    S must be a multiple of ``chunk`` (callers pad); state starts at 0.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    xh = x.transpose(0, 2, 1, 3).reshape(Bsz, H, nc, Q, P)
+    dth = dt.transpose(0, 2, 1).reshape(Bsz, H, nc, Q, 1)
+    a2 = A.reshape(1, H, 1, 1)
+    bh = Bm.reshape(Bsz, nc, Q, N)
+    ch = Cm.reshape(Bsz, nc, Q, N)
+
+    kern = functools.partial(_ssd_kernel, nc)
+    y = pl.pallas_call(
+        kern,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, 1), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, c: (0, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, nc, Q, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, a2, bh, ch)
+    return y.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: MEP confidence-weighted K-model aggregation.
+
+The FedLay/MEP hot path on device is ``w_u ← Σ_k c_k · W_k`` over the
+own model plus the (up to 2L) neighbor models received via ppermute —
+a purely memory-bound reduction over K same-shaped parameter vectors.
+A naive jnp implementation materializes K-1 intermediate sums; the
+kernel streams one lane-aligned tile of every model through VMEM and
+writes each output tile exactly once:
+
+  HBM traffic  = (K + 1) · N · sizeof(dtype)   (optimal)
+  VMEM working = K · BN · 4 bytes              (BN chosen to fit)
+
+Grid: 1-D over N/BN tiles.  K (≤ ~13: self + 2L neighbors) rides whole
+in VMEM per tile.  The MXU is idle — this kernel lives on the VPU —
+so the tile is sized for bandwidth, not matmul alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(models_ref, weights_ref, out_ref):
+    # models_ref: (K, BN); weights_ref: (K, 1); out: (BN,)
+    w = weights_ref[...].astype(jnp.float32)            # (K, 1)
+    m = models_ref[...].astype(jnp.float32)             # (K, BN)
+    out_ref[...] = jnp.sum(m * w, axis=0).astype(out_ref.dtype)
+
+
+def weighted_mix(models: jnp.ndarray, weights: jnp.ndarray,
+                 block_n: int = 65536, interpret: bool = False) -> jnp.ndarray:
+    """models: (K, N) stacked flat model vectors; weights: (K,).
+
+    Returns Σ_k weights[k]·models[k] as (N,) in models.dtype.
+    N is padded to a lane multiple (128) internally.
+    """
+    K, N = models.shape
+    bn = min(block_n, max(128, N))
+    pad = (-N) % bn
+    if pad:
+        models = jnp.pad(models, ((0, 0), (0, pad)))
+    Np = models.shape[1]
+    w2 = weights.reshape(K, 1).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((K, bn), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), models.dtype),
+        interpret=interpret,
+    )(models, w2)
+    return out[:N]

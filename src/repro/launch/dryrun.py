@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh, with zero allocation (ShapeDtypeStruct
+inputs), and extract the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+
+Every row records: per-device memory (args/temp/output), per-device HLO
+FLOPs and HBM bytes from ``cost_analysis``, collective op counts and
+ring-model wire bytes from the HLO text, the three roofline terms in
+seconds, the dominant term, and MODEL_FLOPS/HLO_FLOPs.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import INPUT_SHAPES, REGISTRY, for_shape, get
+from ..models.config import ArchConfig, InputShape
+from ..models.model import find_segments, layer_plan
+from ..optim.optimizers import adamw
+from .hlo_stats import collective_stats, reshape_transpose_count
+from .mesh import make_production_mesh
+from .steps import bundle_for, jit_bundle
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """Useful model FLOPs per step: 6·N·D train, 2·N·D prefill/decode,
+    with N = active params (MoE counts top-k + shared only)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq
+
+
+# --------------------------------------------------------------------------
+# Depth-probe cost correction.
+#
+# XLA's HloCostAnalysis visits a while-loop body ONCE — it does not
+# multiply by the trip count — so the full model's cost_analysis
+# understates scan-stacked layers by ~num_layers×.  We correct by
+# two-point depth extrapolation: compile the same step at per-segment
+# depths r=4 and r=8 (both in the nested-remat regime, so the marginal
+# per-layer cost matches the full model) and extend linearly:
+#     cost(R) = cost(base) + (R - r_base) · [cost(bump) - cost(base)] / Δr
+# This also corrects collective wire bytes for collectives inside scan
+# bodies.  Exact for costs linear in depth, which scans are.
+# --------------------------------------------------------------------------
+
+def _depth_units(cfg: ArchConfig) -> List[Tuple[str, int, int]]:
+    """(unit name, superblock size, full repeats) per scanned stack."""
+    units = [(f"seg{i}", len(pat), reps)
+             for i, (pat, reps) in enumerate(find_segments(layer_plan(cfg)))]
+    if cfg.enc_dec:
+        units.append(("enc", 1, cfg.enc_layers))
+    return units
+
+
+def _with_reps(cfg: ArchConfig, units, reps: List[int]) -> ArchConfig:
+    kw = {}
+    dec_layers = 0
+    for (name, p, _), r in zip(units, reps):
+        if name == "enc":
+            kw["enc_layers"] = r
+        else:
+            dec_layers += r * p
+    kw["num_layers"] = dec_layers
+    if cfg.first_dense_layers > 0:
+        # seg0 is the leading dense run
+        kw["first_dense_layers"] = reps[0] * units[0][1]
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg: ArchConfig, shape: InputShape, mesh, optimizer,
+             dtype) -> Tuple[float, float, float]:
+    from ..models import attention as attn_mod
+    from ..models import model as model_mod
+    model_mod.SCAN_UNROLL = True            # cost analysis needs straight-line HLO
+    attn_mod.CHUNK_OVERRIDE = 4096          # fewer, bigger blocks (same FLOPs)
+    try:
+        bundle = bundle_for(cfg, shape, mesh, optimizer, dtype=dtype)
+        jitted = jit_bundle(bundle, mesh)
+        with mesh:
+            compiled = jitted.lower(*bundle.arg_shapes).compile()
+    finally:
+        model_mod.SCAN_UNROLL = False
+        attn_mod.CHUNK_OVERRIDE = None
+    ca = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            coll.wire_bytes_per_device)
+
+
+def probed_costs(cfg: ArchConfig, shape: InputShape, mesh, optimizer,
+                 dtype) -> Tuple[float, float, float]:
+    """Depth-corrected (flops, hbm_bytes, wire_bytes) per device."""
+    units = _depth_units(cfg)
+    # train probes must sit in the nested-remat regime (repeats ≥ 4) so
+    # the marginal per-layer cost matches the full model; inference steps
+    # have no remat, so shallower probes suffice.  For multi-layer
+    # superblocks (hybrid patterns) the repeat counts are scaled down so
+    # the unrolled probe stays ≤ ~8 layers — those probes run in the
+    # plain-remat regime (one fewer forward recompute per layer), which
+    # understates train FLOPs for such archs by ≤ ~20% (recorded).
+    lo, hi = (4, 8) if shape.kind == "train" else (2, 4)
+
+    def scaled(v: int, p: int) -> int:
+        return max(1, v // p) if p > 1 else v
+
+    base_reps = [min(r, scaled(lo, p)) for (_, p, r) in units]
+    base_cfg = _with_reps(cfg, units, base_reps)
+    base = _measure(base_cfg, shape, mesh, optimizer, dtype)
+    total = list(base)
+    for i, (name, p, r_full) in enumerate(units):
+        if r_full <= base_reps[i]:
+            continue
+        bump_reps = list(base_reps)
+        bump_reps[i] = min(r_full, max(base_reps[i] + 1, scaled(hi, p)))
+        bump = _measure(_with_reps(cfg, units, bump_reps), shape, mesh,
+                        optimizer, dtype)
+        dr = bump_reps[i] - base_reps[i]
+        scale = (r_full - base_reps[i]) / dr
+        for k in range(3):
+            total[k] += (bump[k] - base[k]) * scale
+    return tuple(total)
+
+
+OPT_FLAGS = ("bf16c", "seqp", "moepe", "servetp", "cachelp")
+
+
+def set_opts(opts: str) -> Dict[str, bool]:
+    """Apply §Perf optimization toggles (comma-separated):
+
+    bf16c  — bf16 dot outputs ⇒ bf16 partial-sum collectives
+    seqp   — sequence-parallel inter-layer activations
+    moepe  — per-example MoE dispatch (batch-sharded routing)
+    """
+    from ..dist import sharding as sharding_mod
+    from ..models import layers as layers_mod
+    from ..models import moe as moe_mod
+    from . import steps as steps_mod
+    flags = {f: (f in opts.split(",")) for f in OPT_FLAGS} if opts else \
+        {f: False for f in OPT_FLAGS}
+    layers_mod.F32_DOT_OUTPUT = not flags["bf16c"]
+    steps_mod.SEQ_PARALLEL = flags["seqp"]
+    moe_mod.PER_EXAMPLE = flags["moepe"]
+    steps_mod.SERVE_WEIGHT_STATIONARY = flags["servetp"]
+    sharding_mod.CACHE_LEN_TP = flags["cachelp"]
+    return flags
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            dtype=jnp.bfloat16, verbose: bool = True,
+            probe: bool = True, opts: str = "", sync: str = "standard") -> Dict:
+    flags = set_opts(opts)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = for_shape(get(arch), shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    optimizer = adamw(3e-4) if shape.kind == "train" else None
+
+    t0 = time.time()
+    if sync != "standard":
+        # DFL mode: the paper's technique at production scale — one
+        # FedLay client per data-axis position, model sync = 2L
+        # permutation exchanges (or the allreduce/FedAvg baseline).
+        from .steps import dfl_train_bundle
+        assert shape.kind == "train", "DFL mode lowers train_step"
+        bundle = dfl_train_bundle(cfg, shape, mesh, optimizer, dtype=dtype,
+                                  sync=sync)
+    else:
+        bundle = bundle_for(cfg, shape, mesh, optimizer, dtype=dtype)
+    jitted = jit_bundle(bundle, mesh)
+    with mesh:
+        lowered = jitted.lower(*bundle.arg_shapes)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    resh, tran = reshape_transpose_count(hlo)
+
+    if probe:
+        flops_dev, bytes_dev, wire_dev = probed_costs(
+            cfg, shape, mesh, optimizer, dtype)
+    else:
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        wire_dev = coll.wire_bytes_per_device
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape) / chips      # per-device useful FLOPs
+    row = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "opts": opts or "baseline", "sync": sync,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "attn": ("sliding" if cfg.sliding_window else
+                 ("none" if cfg.family == "ssm" else "full")),
+        "compile_s": round(compile_s, 1),
+        "mem_args_gib": round(mem.argument_size_in_bytes / 2**30, 3),
+        "mem_temp_gib": round(mem.temp_size_in_bytes / 2**30, 3),
+        "mem_out_gib": round(mem.output_size_in_bytes / 2**30, 3),
+        "flops_per_dev": flops_dev,
+        "hbm_bytes_per_dev": bytes_dev,
+        "collective_counts": coll.counts,
+        "wire_bytes_per_dev": wire_dev,
+        "depth_probed": probe,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": (mf / flops_dev) if flops_dev else 0.0,
+        "reshapes": resh, "transposes": tran,
+    }
+    if verbose:
+        print(json.dumps(row))
+        sys.stdout.flush()
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all 10 archs x 4 shapes")
+    ap.add_argument("--out", default=None, help="append JSONL rows here")
+    ap.add_argument("--dtype", default="bf16", choices=["bf16", "f32"])
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip depth-probe cost correction (rolled costs)")
+    ap.add_argument("--opts", default="",
+                    help="perf toggles: comma-set of "
+                         "bf16c,seqp,moepe,servetp,cachelp")
+    ap.add_argument("--sync", default="standard",
+                    choices=["standard", "fedlay", "allreduce"],
+                    help="DFL mode: one FedLay client per data position")
+    args = ap.parse_args()
+
+    dtype = jnp.bfloat16 if args.dtype == "bf16" else jnp.float32
+    archs = sorted(REGISTRY) if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    rows = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch} x {shape_name} x {'2x16x16' if multi else '16x16'}"
+                try:
+                    row = run_one(arch, shape_name, multi, dtype=dtype,
+                                  probe=not args.no_probe, opts=args.opts,
+                                  sync=args.sync)
+                    rows.append(row)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(row) + "\n")
+                except Exception as e:  # noqa: BLE001 — report every pair
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}", file=sys.stderr)
+                    traceback.print_exc()
+    print(f"\n{len(rows)} ok, {len(failures)} failed", file=sys.stderr)
+    for f in failures:
+        print(f"  FAILED: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

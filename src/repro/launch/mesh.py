@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods × 256
+chips as (pod=2, data=16, model=16).  Defined as functions so importing
+this module never touches jax device state — only ``dryrun.py`` forces
+the 512-device host platform.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over the real local devices (CPU smoke tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes of a mesh (everything except model)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def num_clients(mesh: Mesh, client_axis: str = "data") -> int:
+    return mesh.shape[client_axis]

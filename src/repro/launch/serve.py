@@ -1,0 +1,86 @@
+"""Batched serving driver: greedy decode with per-layer KV caches.
+
+Small-model CPU-runnable demonstration of the ``serve_step`` the dry-run
+lowers at production scale: prefill a batch of prompts, then decode
+autoregressively against the cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --batch 4 --prompt-len 32 \
+      --gen 32 --arch tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import REGISTRY, reduce_for_smoke
+from ..models.model import decode_step, forward, init_cache, init_params
+from .train import tiny_lm
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tiny",
+                    help="'tiny' or any assigned arch id (reduced variant)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.arch == "tiny":
+        cfg = tiny_lm()
+    else:
+        cfg = reduce_for_smoke(REGISTRY[args.arch])
+    print(f"serving {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    rng = np.random.default_rng(args.seed)
+    B = args.batch
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(B, args.prompt_len)), jnp.int32)
+    enc = None
+    if cfg.enc_dec:
+        enc = jnp.asarray(rng.normal(size=(B, 64, cfg.d_model)), jnp.float32)
+
+    cache_len = args.prompt_len + args.gen
+    cache = init_cache(cfg, params, B, cache_len, enc_embeds=enc)
+
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+
+    # prefill by stepping the prompt through the cache (teacher-forced)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, t:t + 1])
+    prefill_s = time.time() - t0
+
+    # greedy generation
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    gen_s = time.time() - t0
+
+    gen_tokens = jnp.concatenate(out, axis=1)
+    print(f"prefill: {args.prompt_len} steps in {prefill_s:.2f}s; "
+          f"decode: {B * (args.gen - 1) / max(gen_s, 1e-9):.1f} tok/s")
+    print("sample:", np.asarray(gen_tokens[0, :16]).tolist())
+    assert not bool(jnp.any(gen_tokens < 0)) and \
+        not bool(jnp.any(gen_tokens >= cfg.vocab_size))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+# Model zoo: one config-driven LanguageModel covering all six assigned
+# architecture families, plus the paper's own small client models.
+
+from .config import (ArchConfig, HybridConfig, InputShape, INPUT_SHAPES,
+                     MLAConfig, MoEConfig, SSMConfig, reduce_for_smoke)
+from .model import (decode_step, forward, init_cache, init_params,
+                    train_loss)
+
+__all__ = [
+    "ArchConfig", "HybridConfig", "InputShape", "INPUT_SHAPES",
+    "MLAConfig", "MoEConfig", "SSMConfig", "reduce_for_smoke",
+    "decode_step", "forward", "init_cache", "init_params", "train_loss",
+]

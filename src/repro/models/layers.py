@@ -1,0 +1,125 @@
+"""Shared neural building blocks (pure JAX, functional params-as-pytrees).
+
+Conventions
+-----------
+* every ``init_*`` returns a dict pytree of ``jnp.ndarray`` leaves;
+* every ``apply`` is a pure function of (params, inputs);
+* compute dtype follows the input dtype; params are created in the
+  dtype passed to init (bf16 for the dry-run, f32 for smoke tests);
+* matmuls accumulate in f32 via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.uniform(key, (d_in, d_out), jnp.float32,
+                               -scale, scale)).astype(dtype)
+
+
+# Perf knob (§Perf hillclimb): with True, every dot materializes an f32
+# output that is converted back to the activation dtype afterwards — on
+# a sharded row-parallel matmul XLA then all-reduces the f32 partials
+# (2× wire and HBM bytes).  False emits bf16 dot outputs (the MXU still
+# accumulates in f32 internally), so partial sums cross the network in
+# bf16.  Baseline (paper-faithful numerics) = True.
+F32_DOT_OUTPUT = True
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """f32-accumulated matmul that keeps the activation dtype."""
+    if F32_DOT_OUTPUT:
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.dot(x, w)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(g: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * g.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(matmul(x, p["w_gate"])) * matmul(x, p["w_up"])
+    return matmul(h, p["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embed_apply(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_apply(table: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits in f32 (loss-stability); table: (vocab, d)."""
+    return jnp.dot(x, table.T, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross-entropy; logits (..., V) f32, labels int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill uses the expanded form (per-head K/V decompressed from the
+latent, attention via the blockwise memory-bounded path).  Decode uses
+the **absorbed** form: the query is projected into the latent space so
+attention runs directly against the cached (kv_lora_rank + rope_dim)
+latents — the cache is ``rank+rope`` floats per position instead of
+``2·H·hd``, which is the paper's serving-memory win and exactly why the
+long-context decode shapes favor MLA.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, blockwise_attention
+from .config import MLAConfig
+from .layers import apply_rope, dense_init, matmul, rmsnorm, rmsnorm_init
+
+
+def mla_init(key, d_model: int, num_heads: int, m: MLAConfig,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], d_model, m.q_lora_rank, dtype),
+        "q_a_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, num_heads * qk_dim, dtype),
+        "wkv_a": dense_init(ks[2], d_model, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_a_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            num_heads * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], num_heads * m.v_head_dim, d_model, dtype),
+    }
+
+
+def _queries(p: dict, x: jnp.ndarray, num_heads: int, m: MLAConfig,
+             positions: jnp.ndarray, rope_theta: float, rms_eps: float):
+    B, S, _ = x.shape
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = matmul(rmsnorm(p["q_a_norm"], matmul(x, p["wq_a"]), rms_eps), p["wq_b"])
+    q = q.reshape(B, S, num_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: dict, x: jnp.ndarray, m: MLAConfig, positions: jnp.ndarray,
+             rope_theta: float, rms_eps: float):
+    B, S, _ = x.shape
+    kv = matmul(x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_a_norm"], c_kv, rms_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)  # shared head
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_apply(p: dict, x: jnp.ndarray, *, num_heads: int, m: MLAConfig,
+              rope_theta: float, rms_eps: float = 1e-5,
+              window: Optional[int] = None,
+              positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Train/prefill MLA (expanded form)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q_nope, q_rope = _queries(p, x, num_heads, m, positions, rope_theta, rms_eps)
+    c_kv, k_rope = _latents(p, x, m, positions, rope_theta, rms_eps)
+    kv = matmul(c_kv, p["wkv_b"]).reshape(
+        B, S, num_heads, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, num_heads, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # v_head_dim may differ from qk dim; pad v to qk dim for the shared
+    # blockwise path, then slice back (pure-jnp path only).
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.v_head_dim != qk_dim:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_head_dim)))
+    out = blockwise_attention(q, k, v, window=window)
+    out = out[..., :m.v_head_dim].reshape(B, S, num_heads * m.v_head_dim)
+    return matmul(out, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Absorbed decode against the latent cache
+# --------------------------------------------------------------------------
+
+def init_mla_cache(batch: int, cache_len: int, m: MLAConfig,
+                   dtype=jnp.float32) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray, *,
+               num_heads: int, m: MLAConfig, rope_theta: float,
+               rms_eps: float = 1e-5,
+               window: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
+    """One-token absorbed-form MLA decode.  x: (B, 1, D)."""
+    B = x.shape[0]
+    cache_len = cache["c_kv"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(p, x, num_heads, m, positions, rope_theta, rms_eps)
+    c_kv, k_rope = _latents(p, x, m, positions, rope_theta, rms_eps)
+
+    slot = pos % cache_len if window is not None else pos
+    cc = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, slot, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+
+    # absorb W_uk into the query: q_lat[b,h,r] = Σ_d q_nope[b,h,d]·W_uk[r,h,d]
+    w_kv = p["wkv_b"].reshape(m.kv_lora_rank, num_heads,
+                              m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = w_kv[:, :, :m.qk_nope_head_dim]           # (rank, H, nope)
+    w_uv = w_kv[:, :, m.qk_nope_head_dim:]           # (rank, H, v)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = jnp.einsum("bhr,blr->bhl", q_lat, cc.astype(jnp.float32))
+    s += jnp.einsum("bhd,bld->bhl", q_rope[:, 0].astype(jnp.float32),
+                    cr.astype(jnp.float32))
+    s *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    idx = jnp.arange(cache_len, dtype=jnp.int32)
+    if window is None:
+        valid = idx <= pos
+    else:
+        valid = jnp.where(pos + 1 >= cache_len, jnp.ones((cache_len,), bool),
+                          idx <= pos)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhl,blr->bhr", w, cc.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, num_heads * m.v_head_dim).astype(x.dtype)
+    return matmul(out, p["wo"]), {"c_kv": cc, "k_rope": cr}

@@ -1,0 +1,492 @@
+"""The LanguageModel: config-driven stacks covering all six assigned
+architecture families with one code path.
+
+Layer stacks are compiled into **segments**: the layer-kind sequence
+(attention/MLA/Mamba mixer × dense/MoE FFN × optional cross-attention)
+is factored into the smallest repeating superblock, and each segment is
+a single ``lax.scan`` over stacked parameters — so llama3-405b's 126
+layers trace once, and jamba's 1:7 mamba/attention interleave with
+alternating MoE scans over nine identical 8-layer superblocks.
+
+API
+---
+* ``init_params(cfg, key, dtype)``
+* ``forward(cfg, params, tokens, enc_embeds=None)`` → (logits f32, aux)
+* ``train_loss(cfg, params, batch)`` → scalar (+ MoE aux, + MTP term)
+* ``init_cache(cfg, params, batch, cache_len, dtype, enc_embeds=None)``
+* ``decode_step(cfg, params, cache, token, pos)`` → (logits, new cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig
+from .layers import (embed_apply, embed_init, matmul, mlp_apply, mlp_init,
+                     rmsnorm, rmsnorm_init, softmax_xent, unembed_apply)
+
+LayerKind = Tuple[str, Optional[str], bool]   # (mixer, ffn, cross)
+
+# When True, every lax.scan in the model is fully unrolled at trace time.
+# Used ONLY by the dry-run's depth probes: XLA cost analysis counts a
+# while-loop body once, so small-depth probe configs are compiled
+# unrolled to obtain true per-layer marginal costs.
+SCAN_UNROLL = False
+
+
+def scan(body, init, xs, length=None):
+    n = length
+    if n is None:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, unroll=n if SCAN_UNROLL else 1)
+
+
+def _constrain(x: jnp.ndarray, spec) -> jnp.ndarray:
+    """Pin activation sharding (no-op when spec is None / outside jit).
+
+    GSPMD left alone propagates the FSDP *param* sharding into the
+    activations (batch replicated, d_model sharded) — catastrophic for
+    memory.  One constraint per scan iteration keeps batch on the data
+    axes everywhere.
+    """
+    if x is None or spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (e.g. pure eager smoke tests)
+
+
+# --------------------------------------------------------------------------
+# Layer plan → segments
+# --------------------------------------------------------------------------
+
+def layer_plan(cfg: ArchConfig) -> List[LayerKind]:
+    attn_mask = cfg.attn_layer_mask()
+    moe_mask = cfg.moe_layer_mask()
+    kinds: List[LayerKind] = []
+    for i in range(cfg.num_layers):
+        if attn_mask[i]:
+            mixer = "mla" if cfg.mla is not None else "attn"
+        else:
+            mixer = "mamba"
+        ffn = None if cfg.family == "ssm" else ("moe" if moe_mask[i] else "dense")
+        kinds.append((mixer, ffn, cfg.enc_dec))
+    return kinds
+
+
+def find_segments(kinds: List[LayerKind]) -> List[Tuple[Tuple[LayerKind, ...], int]]:
+    """Factor the plan into (superblock pattern, repeats) segments."""
+    n = len(kinds)
+    for p in range(1, min(16, n) + 1):
+        if n % p == 0 and n // p > 1 \
+                and all(kinds[i] == kinds[i % p] for i in range(n)):
+            return [(tuple(kinds[:p]), n // p)]
+    segs: List[Tuple[Tuple[LayerKind, ...], int]] = []
+    i = 0
+    while i < n:
+        j = i
+        while j < n and kinds[j] == kinds[i]:
+            j += 1
+        segs.append(((kinds[i],), j - i))
+        i = j
+    return segs
+
+
+# --------------------------------------------------------------------------
+# Sublayer init / apply
+# --------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg: ArchConfig, kind: LayerKind, dtype) -> dict:
+    mixer, ffn, cross = kind
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": rmsnorm_init(d, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn.gqa_init(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                  hd, cfg.qk_norm, dtype)
+    elif mixer == "mla":
+        p["mla"] = mla_mod.mla_init(ks[0], d, cfg.num_heads, cfg.mla, dtype)
+    else:
+        p["mamba"] = ssm_mod.mamba_init(ks[0], d, cfg.ssm, dtype)
+    if cross and mixer != "mamba":
+        p["norm_c"] = rmsnorm_init(d, dtype)
+        p["cross"] = attn.cross_init(ks[1], d, cfg.num_heads,
+                                     cfg.num_kv_heads, hd, dtype)
+    if ffn is not None:
+        p["norm2"] = rmsnorm_init(d, dtype)
+        if ffn == "dense":
+            p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, dtype)
+        else:
+            p["moe"] = moe_mod.moe_init(ks[2], d, cfg.moe, dtype)
+    return p
+
+
+def _apply_sublayer(p: dict, cfg: ArchConfig, kind: LayerKind, x: jnp.ndarray,
+                    aux: jnp.ndarray, *, window: Optional[int],
+                    memory_kv=None, causal: bool = True):
+    mixer, ffn, cross = kind
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(p["norm1"], x, cfg.rms_eps)
+    if mixer == "attn":
+        h = attn.gqa_apply(p["attn"], h, num_heads=cfg.num_heads,
+                           num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+                           rope_theta=cfg.rope_theta, rms_eps=cfg.rms_eps,
+                           window=window, causal=causal)
+    elif mixer == "mla":
+        h = mla_mod.mla_apply(p["mla"], h, num_heads=cfg.num_heads,
+                              m=cfg.mla, rope_theta=cfg.rope_theta,
+                              rms_eps=cfg.rms_eps, window=window)
+    else:
+        h = ssm_mod.mamba_apply(p["mamba"], h, cfg.ssm, cfg.rms_eps)
+    x = x + h
+    if cross and mixer != "mamba" and memory_kv is not None:
+        h = rmsnorm(p["norm_c"], x, cfg.rms_eps)
+        h = attn.cross_apply(p["cross"], h, memory_kv, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads, head_dim=hd)
+        x = x + h
+    if ffn is not None:
+        h = rmsnorm(p["norm2"], x, cfg.rms_eps)
+        if ffn == "dense":
+            h = mlp_apply(p["mlp"], h)
+        else:
+            h, a = moe_mod.moe_apply(p["moe"], h, cfg.moe)
+            aux = aux + a
+        x = x + h
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# Decode sublayer (cache-carrying)
+# --------------------------------------------------------------------------
+
+def _init_sublayer_cache(cfg: ArchConfig, kind: LayerKind, batch: int,
+                         cache_len: int, dtype) -> dict:
+    mixer, _, cross = kind
+    hd = cfg.resolved_head_dim
+    c: dict = {}
+    if mixer == "attn":
+        length = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        c["kv"] = attn.init_kv_cache(batch, length, cfg.num_kv_heads, hd, dtype)
+    elif mixer == "mla":
+        length = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        c["mla"] = mla_mod.init_mla_cache(batch, length, cfg.mla, dtype)
+    else:
+        c["ssm"] = ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    if cross and mixer != "mamba":
+        c["mem_k"] = jnp.zeros((batch, 0, cfg.num_kv_heads, hd), dtype)  # filled by init_cache
+    return c
+
+
+def _apply_sublayer_decode(p: dict, c: dict, cfg: ArchConfig, kind: LayerKind,
+                           x: jnp.ndarray, pos):
+    mixer, ffn, cross = kind
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window
+    h = rmsnorm(p["norm1"], x, cfg.rms_eps)
+    new_c = dict(c)
+    if mixer == "attn":
+        h, kv = attn.gqa_decode(p["attn"], h, c["kv"], pos,
+                                num_heads=cfg.num_heads,
+                                num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+                                rope_theta=cfg.rope_theta, rms_eps=cfg.rms_eps,
+                                window=window)
+        new_c["kv"] = kv
+    elif mixer == "mla":
+        h, mc = mla_mod.mla_decode(p["mla"], h, c["mla"], pos,
+                                   num_heads=cfg.num_heads, m=cfg.mla,
+                                   rope_theta=cfg.rope_theta,
+                                   rms_eps=cfg.rms_eps, window=window)
+        new_c["mla"] = mc
+    else:
+        h, sc = ssm_mod.mamba_decode(p["mamba"], h, c["ssm"], cfg.ssm, cfg.rms_eps)
+        new_c["ssm"] = sc
+    x = x + h
+    if cross and mixer != "mamba" and "mem_k" in c:
+        h = rmsnorm(p["norm_c"], x, cfg.rms_eps)
+        h = attn.cross_apply(p["cross"], h, (c["mem_k"], c["mem_v"]),
+                             num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads, head_dim=hd)
+        x = x + h
+    if ffn is not None:
+        h = rmsnorm(p["norm2"], x, cfg.rms_eps)
+        if ffn == "dense":
+            h = mlp_apply(p["mlp"], h)
+        else:
+            h, _ = moe_mod.moe_apply(p["moe"], h, cfg.moe)
+        x = x + h
+    return x, new_c
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def _init_segment(key, cfg: ArchConfig, pattern: Tuple[LayerKind, ...],
+                  repeats: int, dtype) -> dict:
+    def one(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"sub{i}": _init_sublayer(ks[i], cfg, kind, dtype)
+                for i, kind in enumerate(pattern)}
+    keys = jax.random.split(key, repeats)
+    return jax.vmap(one)(keys)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    segs = find_segments(layer_plan(cfg))
+    n_aux = 4 + len(segs) + (1 if cfg.mtp_depth else 0)
+    ks = jax.random.split(key, n_aux)
+    params: dict = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype)
+    for si, (pattern, repeats) in enumerate(segs):
+        params[f"seg{si}"] = _init_segment(ks[4 + si], cfg, pattern, repeats, dtype)
+    if cfg.enc_dec:
+        enc_kind: LayerKind = ("attn", "dense", False)
+        params["encoder"] = _init_segment(ks[2], cfg, (enc_kind,),
+                                          cfg.enc_layers, dtype)
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.mtp_depth:
+        mtp_kind: LayerKind = layer_plan(cfg)[-1]
+        params["mtp_proj"] = jax.random.normal(
+            ks[3], (2 * cfg.d_model, cfg.d_model), jnp.float32).astype(dtype) * 0.02
+        params["mtp_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        params["mtp"] = _init_segment(ks[-1], cfg, (mtp_kind,), cfg.mtp_depth, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def _run_segment(seg_params: dict, cfg: ArchConfig, pattern, x, aux, *,
+                 window, memory_kv=None, causal=True, remat=False,
+                 act_spec=None):
+    def body(carry, p_slice):
+        h, a = carry
+        h = _constrain(h, act_spec)
+        for i, kind in enumerate(pattern):
+            h, a = _apply_sublayer(p_slice[f"sub{i}"], cfg, kind, h, a,
+                                   window=window, memory_kv=memory_kv,
+                                   causal=causal)
+            h = _constrain(h, act_spec)
+        return (h, a), None
+
+    leaves = jax.tree.leaves(seg_params)
+    repeats = leaves[0].shape[0] if leaves else 0
+    if not remat or repeats < 4:
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = scan(body, (x, aux), seg_params)
+        return x, aux
+
+    # Nested remat: outer scan over ~√R groups of g layers (saves ~√R
+    # carries instead of R); an awkward trailing remainder (R % g) runs
+    # as a plain-remat scan so no divisibility is required.
+    g = max(2, int(repeats ** 0.5))
+    main = (repeats // g) * g
+    head = jax.tree.map(lambda l: l[:main].reshape((main // g, g) + l.shape[1:]),
+                        seg_params)
+    inner_body = jax.checkpoint(body, prevent_cse=False)
+
+    def outer(carry, p_group):
+        out, _ = scan(inner_body, carry, p_group)
+        return out, None
+
+    outer = jax.checkpoint(outer, prevent_cse=False)
+    (x, aux), _ = scan(outer, (x, aux), head)
+    if main < repeats:
+        tail = jax.tree.map(lambda l: l[main:], seg_params)
+        (x, aux), _ = scan(inner_body, (x, aux), tail)
+    return x, aux
+
+
+def encode(cfg: ArchConfig, params: dict, enc_embeds: jnp.ndarray,
+           remat: bool = False, act_spec=None) -> jnp.ndarray:
+    """Encoder stack over precomputed frontend embeddings (B, M, D)."""
+    enc_kind: LayerKind = ("attn", "dense", False)
+    x, _ = _run_segment(params["encoder"], cfg, (enc_kind,), enc_embeds,
+                        jnp.zeros((), jnp.float32), window=None,
+                        causal=False, remat=remat, act_spec=act_spec)
+    return rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+            enc_embeds: Optional[jnp.ndarray] = None, remat: bool = False,
+            return_hidden: bool = False, act_spec=None, logit_spec=None):
+    """tokens (B, S) → (logits (B, S, V) f32, aux_loss scalar)."""
+    segs = find_segments(layer_plan(cfg))
+    x = _constrain(embed_apply(params["embed"], tokens), act_spec)
+    aux = jnp.zeros((), jnp.float32)
+    memory_kv = None
+    if cfg.enc_dec:
+        assert enc_embeds is not None, "enc-dec model needs encoder embeddings"
+        enc_out = encode(cfg, params, enc_embeds, remat=remat,
+                         act_spec=act_spec)
+        # each decoder sublayer projects the encoder memory with its own
+        # cross weights, recomputed inside its scan body
+        memory_kv = enc_out
+    for si, (pattern, repeats) in enumerate(segs):
+        if cfg.enc_dec:
+            x, aux = _run_segment_encdec(params[f"seg{si}"], cfg, pattern, x,
+                                         aux, memory=memory_kv,
+                                         window=cfg.sliding_window,
+                                         remat=remat, act_spec=act_spec)
+        else:
+            x, aux = _run_segment(params[f"seg{si}"], cfg, pattern, x, aux,
+                                  window=cfg.sliding_window, remat=remat,
+                                  act_spec=act_spec)
+    h = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = _constrain(_mask_pad(unembed_apply(table, h), cfg), logit_spec)
+    if return_hidden:
+        return logits, aux, h
+    return logits, aux
+
+
+def _mask_pad(logits: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """-inf on the padded vocab rows so they never win softmax/argmax."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(valid, logits, -1e30)
+
+
+def _run_segment_encdec(seg_params, cfg, pattern, x, aux, *, memory, window,
+                        remat=False, act_spec=None):
+    """Enc-dec segment: each sublayer projects the encoder memory with its
+    own cross weights (recomputed per layer inside the scan)."""
+    hd = cfg.resolved_head_dim
+
+    def body(carry, p_slice):
+        h, a = carry
+        h = _constrain(h, act_spec)
+        for i, kind in enumerate(pattern):
+            p = p_slice[f"sub{i}"]
+            mem_kv = attn.cross_memory(p["cross"], memory,
+                                       num_kv_heads=cfg.num_kv_heads,
+                                       head_dim=hd) if "cross" in p else None
+            h, a = _apply_sublayer(p, cfg, kind, h, a, window=window,
+                                   memory_kv=mem_kv)
+        return (h, a), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = scan(body, (x, aux), seg_params)
+    return x, aux
+
+
+def train_loss(cfg: ArchConfig, params: dict, batch: Dict[str, jnp.ndarray],
+               remat: bool = True, act_spec=None, logit_spec=None) -> jnp.ndarray:
+    """batch: tokens (B,S) int32, labels (B,S) int32 (+ enc_embeds)."""
+    out = forward(cfg, params, batch["tokens"],
+                  enc_embeds=batch.get("enc_embeds"), remat=remat,
+                  return_hidden=bool(cfg.mtp_depth), act_spec=act_spec,
+                  logit_spec=logit_spec)
+    if cfg.mtp_depth:
+        logits, aux, hidden = out
+    else:
+        logits, aux = out
+    loss = softmax_xent(logits, batch["labels"])
+    if cfg.mtp_depth:
+        loss = loss + 0.3 * _mtp_loss(cfg, params, hidden, batch,
+                                      act_spec=act_spec)
+    return loss + aux
+
+
+def _mtp_loss(cfg: ArchConfig, params: dict, hidden: jnp.ndarray,
+              batch: Dict[str, jnp.ndarray], act_spec=None) -> jnp.ndarray:
+    """DeepSeek-V3 multi-token prediction (depth 1): combine the trunk
+    hidden state at t with the embedding of token t+1, run one extra
+    block, predict token t+2 (= labels shifted by one)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    nxt_emb = embed_apply(params["embed"], labels)          # token t+1
+    h = jnp.concatenate([rmsnorm(params["mtp_norm"], hidden, cfg.rms_eps),
+                         nxt_emb], axis=-1)
+    h = matmul(h, params["mtp_proj"])
+    kind = layer_plan(cfg)[-1]
+    h, _ = _run_segment(params["mtp"], cfg, (kind,), h,
+                        jnp.zeros((), jnp.float32), window=cfg.sliding_window,
+                        act_spec=act_spec)
+    h = rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad(unembed_apply(table, h[:, :-1]), cfg)
+    mtp_labels = labels[:, 1:]
+    return softmax_xent(logits, mtp_labels)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, params: dict, batch: int, cache_len: int,
+               dtype=jnp.float32,
+               enc_embeds: Optional[jnp.ndarray] = None) -> dict:
+    """Build the per-layer decode cache pytree (stacked per segment).
+
+    For enc-dec models the encoder runs once here and each decoder
+    layer's cross K/V memory is precomputed into the cache.
+    """
+    segs = find_segments(layer_plan(cfg))
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    enc_out = None
+    if cfg.enc_dec:
+        assert enc_embeds is not None
+        enc_out = encode(cfg, params, enc_embeds)
+
+    for si, (pattern, repeats) in enumerate(segs):
+        def one(p_slice):
+            out = {}
+            for i, kind in enumerate(pattern):
+                c = _init_sublayer_cache(cfg, kind, batch, cache_len, dtype)
+                if "mem_k" in c:
+                    mk, mv = attn.cross_memory(
+                        p_slice[f"sub{i}"]["cross"], enc_out,
+                        num_kv_heads=cfg.num_kv_heads,
+                        head_dim=cfg.resolved_head_dim)
+                    c["mem_k"], c["mem_v"] = mk.astype(dtype), mv.astype(dtype)
+                out[f"sub{i}"] = c
+            return out
+        if cfg.enc_dec:
+            cache[f"seg{si}"] = jax.vmap(one)(params[f"seg{si}"])
+        else:
+            cache[f"seg{si}"] = jax.vmap(lambda _: one(None))(
+                jnp.arange(repeats))
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """One decode step.  token: (B, 1) int32.  Returns (logits (B, V) f32,
+    updated cache with pos advanced)."""
+    segs = find_segments(layer_plan(cfg))
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], token)
+    new_cache: dict = {"pos": pos + 1}
+    for si, (pattern, repeats) in enumerate(segs):
+        def body(h, slices):
+            p_slice, c_slice = slices
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                h, nc = _apply_sublayer_decode(p_slice[f"sub{i}"],
+                                               c_slice[f"sub{i}"], cfg, kind,
+                                               h, pos)
+                new_c[f"sub{i}"] = nc
+            return h, new_c
+        x, seg_cache = scan(body, x, (params[f"seg{si}"], cache[f"seg{si}"]))
+        new_cache[f"seg{si}"] = seg_cache
+    h = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad(unembed_apply(table, h), cfg)[:, 0]
+    return logits, new_cache

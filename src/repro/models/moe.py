@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN: top-k softmax router, capacity-based static
+dispatch (gather → grouped einsum → scatter-add combine), optional
+shared (always-on) experts, and the load-balance auxiliary loss.
+
+Dispatch is the GShard/MaxText-style capacity formulation because it is
+static-shape, fully differentiable, and the grouped einsum's expert
+dimension maps directly onto the mesh ``model`` axis → expert
+parallelism with a single all-to-all on each side.  Tokens beyond an
+expert's capacity are dropped (weight renormalized) — capacity factor
+1.25 keeps drop rates negligible at the assigned top-k/E ratios.
+
+DeepSeek-V3's sigmoid+bias router is simplified to softmax top-k with
+the standard aux loss (recorded in DESIGN.md §deviations); the
+shared-expert and first-dense-layers structure is kept faithful.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+from .layers import dense_init, matmul, mlp_apply, mlp_init
+
+
+def moe_init(key, d_model: int, m: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = m.num_experts, m.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d_model, e, jnp.float32),  # router in f32
+        "w_gate": dense_init(ks[1], d_model, e * f, dtype).reshape(d_model, e, f).transpose(1, 0, 2),
+        "w_up": dense_init(ks[2], d_model, e * f, dtype).reshape(d_model, e, f).transpose(1, 0, 2),
+        "w_down": dense_init(ks[3], f, e * d_model, dtype).reshape(f, e, d_model).transpose(1, 0, 2),
+    }
+    if m.num_shared:
+        p["shared"] = mlp_init(ks[4], d_model, f * m.num_shared, dtype)
+    return p
+
+
+def router_topk(logits: jnp.ndarray, top_k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(T, E) logits → (T, k) normalized probs + (T, k) expert ids."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_i
+
+
+def load_balance_loss(probs_mean: jnp.ndarray, frac_routed: jnp.ndarray) -> jnp.ndarray:
+    """Switch/GShard aux loss: E · Σ_e f_e · P_e (1.0 when balanced)."""
+    e = probs_mean.shape[-1]
+    return e * jnp.sum(frac_routed * probs_mean)
+
+
+# Perf knob (§Perf hillclimb): the baseline dispatch sorts/buckets over
+# the GLOBAL token set (B·S tokens) — the argsort/bincount/scatter are
+# unshardable along tokens, so GSPMD all-gathers activations around
+# them.  PER_EXAMPLE=True vmaps the dispatch over the batch dimension:
+# routing/capacity become per-sequence (capacity C' = k·S/E·cf each),
+# every index op stays batch-sharded, and expert compute becomes a
+# batched grouped einsum (the all-to-all moves only dispatched tiles).
+PER_EXAMPLE = False
+
+
+def moe_apply(p: dict, x: jnp.ndarray, m: MoEConfig,
+              capacity_factor: Optional[float] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (out (B, S, D), aux_loss scalar)."""
+    if capacity_factor is None:
+        capacity_factor = m.capacity_factor
+    if PER_EXAMPLE and x.shape[0] > 1:
+        out, aux = jax.vmap(
+            lambda xb: _moe_apply_flat(p, xb[None], m, capacity_factor))(x)
+        return out[:, 0], jnp.mean(aux)
+    return _moe_apply_flat(p, x, m, capacity_factor)
+
+
+def _moe_apply_flat(p: dict, x: jnp.ndarray, m: MoEConfig,
+                    capacity_factor: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, D = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    xf = x.reshape(T, D)
+
+    logits = jnp.dot(xf.astype(jnp.float32), p["router"])          # (T, E)
+    top_p, top_i = router_topk(logits, k)                          # (T, k)
+
+    # aux loss statistics
+    probs = jax.nn.softmax(logits, axis=-1)
+    routed = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], top_i].set(1.0)
+    aux = load_balance_loss(probs.mean(0), routed.mean(0) / k)
+
+    # ---- capacity dispatch ------------------------------------------------
+    C = max(1, int(math.ceil(k * T / E * capacity_factor)))
+    flat_e = top_i.reshape(T * k)                                  # expert of each slot
+    flat_p = top_p.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)                       # group by expert
+    e_sorted = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_group = jnp.arange(T * k) - starts[e_sorted]            # rank within expert
+
+    keep = pos_in_group < C
+    dest_e = jnp.where(keep, e_sorted, E)                          # row E = drop bin
+    dest_c = jnp.where(keep, pos_in_group, 0).astype(jnp.int32)
+
+    table_tok = jnp.zeros((E + 1, C), jnp.int32).at[dest_e, dest_c].set(flat_t[order])
+    table_w = jnp.zeros((E + 1, C), jnp.float32).at[dest_e, dest_c].set(
+        jnp.where(keep, flat_p[order], 0.0))
+    table_tok, table_w = table_tok[:E], table_w[:E]                # (E, C)
+
+    # ---- expert compute (grouped einsum; E maps to the mesh model axis) ---
+    xg = jnp.take(xf, table_tok.reshape(E * C), axis=0).reshape(E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"],
+                               preferred_element_type=jnp.float32)) * \
+        jnp.einsum("ecd,edf->ecf", xg, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    yg = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["w_down"],
+                    preferred_element_type=jnp.float32)            # (E, C, D) f32
+
+    # ---- combine: weighted scatter-add back to token order -----------------
+    out = jnp.zeros((T, D), jnp.float32).at[table_tok.reshape(E * C)].add(
+        (yg * table_w[..., None]).reshape(E * C, D))
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], xf)
+    return out.reshape(B, S, D), aux * m.router_aux_coef

@@ -1,0 +1,286 @@
+"""The paper's client-side models (Table II) as DFL ``Task``s: an MLP for
+MNIST-like digit classification, a CNN for CIFAR-like images, and an
+LSTM for next-character prediction — all pure JAX, exposed through the
+flat-parameter ``Task`` protocol the DFL engines drive.
+
+The engines exchange *flat f32 vectors* (exactly what goes over the wire
+in the real system), so each task owns a flatten/unflatten pair and
+jit'd local-SGD steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.noniid import Partition
+from ..data.synthetic import CharLMData, ClassificationData
+
+
+def _flatten(tree) -> Tuple[np.ndarray, object]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = np.concatenate([np.asarray(l, np.float32).ravel() for l in leaves])
+    shapes = [l.shape for l in leaves]
+    return flat, (treedef, shapes)
+
+
+def _unflatten(flat: np.ndarray, spec) -> object:
+    treedef, shapes = spec
+    leaves, off = [], 0
+    for s in shapes:
+        n = int(np.prod(s)) if s else 1
+        leaves.append(jnp.asarray(flat[off:off + n], jnp.float32).reshape(s))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class _TaskBase:
+    """Shared local-SGD plumbing over a flat parameter vector."""
+
+    def __init__(self, data, partition: Partition, labels: np.ndarray,
+                 lr: float, batch: int, local_steps: int):
+        self.data = data
+        self.partition = partition
+        self._labels = np.asarray(labels)
+        self.num_clients = len(partition.client_indices)
+        self.lr = lr
+        self.batch = batch
+        self.local_steps = local_steps
+        self._spec = None
+
+    # -- Task protocol -----------------------------------------------------
+    def init_params(self, seed: int) -> np.ndarray:
+        tree = self._init_tree(jax.random.PRNGKey(seed))
+        flat, self._spec = _flatten(tree)
+        return flat
+
+    def label_histogram(self, client: int) -> np.ndarray:
+        return self.partition.label_histogram(self._labels, client)
+
+    def train_cost(self, client: int) -> float:
+        return float(len(self.partition.client_indices[client]))
+
+    def local_train(self, params: np.ndarray, client: int, seed: int) -> np.ndarray:
+        tree = _unflatten(params, self._spec)
+        idx = self.partition.client_indices[client]
+        rng = np.random.default_rng(seed)
+        for _ in range(self.local_steps):
+            take = rng.choice(idx, size=min(self.batch, len(idx)), replace=False)
+            tree = self._sgd_step(tree, *self._batch_of(take))
+        flat, _ = _flatten(tree)
+        return flat
+
+    def evaluate(self, params: np.ndarray) -> float:
+        tree = _unflatten(params, self._spec)
+        return float(self._accuracy(tree))
+
+
+# --------------------------------------------------------------------------
+# MLP on MNIST-like (paper: 247 KB model)
+# --------------------------------------------------------------------------
+
+class MLPTask(_TaskBase):
+    def __init__(self, data: ClassificationData, partition: Partition,
+                 hidden: int = 64, lr: float = 0.1, batch: int = 32,
+                 local_steps: int = 4):
+        super().__init__(data, partition, data.y_train, lr, batch, local_steps)
+        self.hidden = hidden
+        self.d_in = data.x_train.shape[1]
+        self.k = data.num_classes
+        self._xtr = jnp.asarray(data.x_train)
+        self._ytr = jnp.asarray(data.y_train)
+        self._xte = jnp.asarray(data.x_test)
+        self._yte = jnp.asarray(data.y_test)
+
+        @jax.jit
+        def step(tree, x, y):
+            def loss(t):
+                h = jax.nn.relu(x @ t["w1"] + t["b1"])
+                logits = h @ t["w2"] + t["b2"]
+                return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+            g = jax.grad(loss)(tree)
+            return jax.tree.map(lambda p, gg: p - self.lr * gg, tree, g)
+
+        @jax.jit
+        def acc(tree):
+            h = jax.nn.relu(self._xte @ tree["w1"] + tree["b1"])
+            return jnp.mean(jnp.argmax(h @ tree["w2"] + tree["b2"], -1) == self._yte)
+
+        self._step, self._acc = step, acc
+
+    def _init_tree(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (self.d_in, self.hidden)) * (1 / np.sqrt(self.d_in)),
+            "b1": jnp.zeros(self.hidden),
+            "w2": jax.random.normal(k2, (self.hidden, self.k)) * (1 / np.sqrt(self.hidden)),
+            "b2": jnp.zeros(self.k),
+        }
+
+    def _batch_of(self, idx):
+        return self._xtr[idx], self._ytr[idx]
+
+    def _sgd_step(self, tree, x, y):
+        return self._step(tree, x, y)
+
+    def _accuracy(self, tree):
+        return self._acc(tree)
+
+
+# --------------------------------------------------------------------------
+# CNN on CIFAR-like
+# --------------------------------------------------------------------------
+
+class CNNTask(_TaskBase):
+    def __init__(self, data: ClassificationData, partition: Partition,
+                 channels: int = 16, lr: float = 0.05, batch: int = 32,
+                 local_steps: int = 4):
+        super().__init__(data, partition, data.y_train, lr, batch, local_steps)
+        self.ch = channels
+        self.k = data.num_classes
+        h = data.x_train.shape[1]
+        self.d_flat = (h // 4) * (h // 4) * (2 * channels)
+        self._xtr = jnp.asarray(data.x_train)
+        self._ytr = jnp.asarray(data.y_train)
+        self._xte = jnp.asarray(data.x_test)
+        self._yte = jnp.asarray(data.y_test)
+
+        def fwd(t, x):
+            x = jax.lax.conv_general_dilated(
+                x, t["c1"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + t["b1"])
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            x = jax.lax.conv_general_dilated(
+                x, t["c2"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + t["b2"])
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            x = x.reshape(x.shape[0], -1)
+            return x @ t["w"] + t["b"]
+
+        @jax.jit
+        def step(tree, x, y):
+            def loss(t):
+                logits = fwd(t, x)
+                return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+            g = jax.grad(loss)(tree)
+            return jax.tree.map(lambda p, gg: p - self.lr * gg, tree, g)
+
+        @jax.jit
+        def acc(tree):
+            return jnp.mean(jnp.argmax(fwd(tree, self._xte), -1) == self._yte)
+
+        self._step, self._acc = step, acc
+
+    def _init_tree(self, key):
+        ks = jax.random.split(key, 3)
+        c = self.ch
+        return {
+            "c1": jax.random.normal(ks[0], (3, 3, 3, c)) * 0.1,
+            "b1": jnp.zeros(c),
+            "c2": jax.random.normal(ks[1], (3, 3, c, 2 * c)) * 0.1,
+            "b2": jnp.zeros(2 * c),
+            "w": jax.random.normal(ks[2], (self.d_flat, self.k)) * (1 / np.sqrt(self.d_flat)),
+            "b": jnp.zeros(self.k),
+        }
+
+    def _batch_of(self, idx):
+        return self._xtr[idx], self._ytr[idx]
+
+    def _sgd_step(self, tree, x, y):
+        return self._step(tree, x, y)
+
+    def _accuracy(self, tree):
+        return self._acc(tree)
+
+
+# --------------------------------------------------------------------------
+# LSTM on Shakespeare-like role streams
+# --------------------------------------------------------------------------
+
+class LSTMTask(_TaskBase):
+    """Next-character prediction; each client = one (or more) role streams."""
+
+    def __init__(self, data: CharLMData, num_clients: int, hidden: int = 64,
+                 seq: int = 32, lr: float = 0.5, batch: int = 16,
+                 local_steps: int = 4):
+        roles = data.role_streams.shape[0]
+        assign = [list(range(c, roles, num_clients)) for c in range(num_clients)]
+        part = Partition(client_indices=[np.array(a) for a in assign],
+                         num_classes=10)
+        super().__init__(data, part, data.role_labels, lr, batch, local_steps)
+        self.v = data.vocab_size
+        self.hd = hidden
+        self.seq = seq
+        self._streams = jnp.asarray(data.role_streams)
+        self._test = jnp.asarray(data.test_stream)
+
+        def fwd_loss(t, x, y):
+            emb = t["emb"][x]                       # (b, s, e)
+            B = x.shape[0]
+            h0 = jnp.zeros((B, self.hd))
+            c0 = jnp.zeros((B, self.hd))
+
+            def cell(carry, e_t):
+                h, c = carry
+                z = e_t @ t["wx"] + h @ t["wh"] + t["b"]
+                i, f, g, o = jnp.split(z, 4, axis=-1)
+                c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+                h = jax.nn.sigmoid(o) * jnp.tanh(c)
+                return (h, c), h
+
+            (_, _), hs = jax.lax.scan(cell, (h0, c0), emb.transpose(1, 0, 2))
+            logits = hs.transpose(1, 0, 2) @ t["wo"] + t["bo"]   # (b, s, v)
+            logp = jax.nn.log_softmax(logits)
+            gold = jnp.take_along_axis(logp, y[..., None], -1)[..., 0]
+            return -jnp.mean(gold), logits
+
+        @jax.jit
+        def step(tree, x, y):
+            g = jax.grad(lambda t: fwd_loss(t, x, y)[0])(tree)
+            return jax.tree.map(lambda p, gg: p - self.lr * gg, tree, g)
+
+        @jax.jit
+        def acc(tree):
+            n = (self._test.shape[0] - 1) // self.seq
+            x = self._test[:n * self.seq].reshape(n, self.seq)
+            y = self._test[1:n * self.seq + 1].reshape(n, self.seq)
+            _, logits = fwd_loss(tree, x, y)
+            return jnp.mean(jnp.argmax(logits, -1) == y)
+
+        self._step, self._acc = step, acc
+
+    def _init_tree(self, key):
+        ks = jax.random.split(key, 4)
+        e = 32
+        return {
+            "emb": jax.random.normal(ks[0], (self.v, e)) * 0.1,
+            "wx": jax.random.normal(ks[1], (e, 4 * self.hd)) * (1 / np.sqrt(e)),
+            "wh": jax.random.normal(ks[2], (self.hd, 4 * self.hd)) * (1 / np.sqrt(self.hd)),
+            "b": jnp.zeros(4 * self.hd),
+            "wo": jax.random.normal(ks[3], (self.hd, self.v)) * (1 / np.sqrt(self.hd)),
+            "bo": jnp.zeros(self.v),
+        }
+
+    def _batch_of(self, roles):
+        rng = np.random.default_rng(int(np.sum(roles)) + 1)
+        stream_len = self._streams.shape[1]
+        xs, ys = [], []
+        for _ in range(self.batch):
+            r = int(rng.choice(roles))
+            t0 = int(rng.integers(0, stream_len - self.seq - 1))
+            xs.append(self._streams[r, t0:t0 + self.seq])
+            ys.append(self._streams[r, t0 + 1:t0 + self.seq + 1])
+        return jnp.stack(xs), jnp.stack(ys)
+
+    def _sgd_step(self, tree, x, y):
+        return self._step(tree, x, y)
+
+    def _accuracy(self, tree):
+        return self._acc(tree)

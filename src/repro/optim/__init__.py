@@ -1,0 +1,6 @@
+from .optimizers import (AdamWState, Optimizer, adamw, apply_updates,
+                         clip_by_global_norm, cosine_schedule, global_norm,
+                         sgd)
+
+__all__ = ["AdamWState", "Optimizer", "adamw", "apply_updates",
+           "clip_by_global_norm", "cosine_schedule", "global_norm", "sgd"]

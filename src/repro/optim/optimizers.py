@@ -1,0 +1,105 @@
+"""Optimizers — pure-pytree SGD(+momentum) and AdamW, no external deps.
+
+Each optimizer is an (init, update) pair over arbitrary pytrees; states
+are pytrees with the same sharding as the params (so FSDP carries the
+optimizer state shards for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), ()
+        new_m = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                             state, grads)
+        if nesterov:
+            step = jax.tree.map(lambda m, g: -lr * (momentum * m + g), new_m, grads)
+        else:
+            step = jax.tree.map(lambda m: -lr * m, new_m)
+        return step, new_m
+
+    return Optimizer(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(AdamWState, ["mu", "nu", "count"], [])
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          lr_schedule: Optional[Callable] = None) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(mu=zeros(), nu=zeros(),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        cur_lr = lr if lr_schedule is None else lr * lr_schedule(count)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** count.astype(jnp.float32)), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** count.astype(jnp.float32)), nu)
+        step = jax.tree.map(
+            lambda m, v, p: (-cur_lr * (m / (jnp.sqrt(v) + eps)
+                                        + weight_decay * p.astype(jnp.float32))
+                             ).astype(p.dtype),
+            mu_hat, nu_hat, params)
+        return step, AdamWState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1) -> Callable:
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

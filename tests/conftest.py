@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests see the real single CPU device; ONLY launch/dryrun.py forces 512
+# host devices (per the dry-run contract).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")

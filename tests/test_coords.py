@@ -1,0 +1,62 @@
+"""Virtual coordinates + circular distance (paper Def. 2) properties."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.coords import (NodeAddress, ccw_arc, circular_distance,
+                               closer, coordinate, coordinates, cw_arc,
+                               fnv1a_64, ring_order)
+
+floats01 = st.floats(min_value=0.0, max_value=1.0, exclude_max=True,
+                     allow_nan=False)
+
+
+def test_hash_deterministic_and_distinct():
+    assert coordinate(7, 0) == coordinate(7, 0)
+    assert coordinate(7, 0) != coordinate(7, 1)
+    assert coordinate(7, 0) != coordinate(8, 0)
+    assert coordinate("10.0.0.1", 2) == coordinate("10.0.0.1", 2)
+
+
+def test_coordinates_in_range_and_uniformish():
+    xs = np.array([coordinate(i, 0) for i in range(4000)])
+    assert (0 <= xs).all() and (xs < 1).all()
+    # crude uniformity: decile occupancy within 30% of expected
+    hist, _ = np.histogram(xs, bins=10, range=(0, 1))
+    assert hist.min() > 0.7 * 400 and hist.max() < 1.3 * 400
+
+
+@given(floats01, floats01)
+def test_cd_symmetry_and_range(x, y):
+    d = circular_distance(x, y)
+    assert 0 <= d <= 0.5
+    assert d == circular_distance(y, x)
+    assert circular_distance(x, x) == 0.0
+
+
+@given(floats01, floats01)
+def test_cd_is_min_arc(x, y):
+    assert abs(circular_distance(x, y)
+               - min(cw_arc(x, y), ccw_arc(x, y))) < 1e-12
+
+
+@given(floats01, floats01, floats01)
+def test_cd_triangle_inequality_on_ring(x, y, z):
+    assert circular_distance(x, z) <= (circular_distance(x, y)
+                                       + circular_distance(y, z) + 1e-12)
+
+
+@given(floats01, floats01, floats01)
+def test_closer_total_order(x, y, t):
+    # exactly one of closer(x,y), closer(y,x) unless identical node
+    a = closer(x, y, t, tie_x=0, tie_y=1)
+    b = closer(y, x, t, tie_x=1, tie_y=0)
+    assert a != b
+
+
+def test_ring_order_sorted_by_coord():
+    addrs = [NodeAddress.create(i, 2) for i in range(50)]
+    order = ring_order(addrs, 0)
+    xs = {a.node_id: a.coords[0] for a in addrs}
+    vals = [xs[u] for u in order]
+    assert vals == sorted(vals)

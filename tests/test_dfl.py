@@ -1,0 +1,81 @@
+"""DFL engine integration: the paper's method comparisons in miniature —
+FedLay converges, beats isolated training, tracks FedAvg, fingerprints
+suppress duplicate sends, async helps stragglers."""
+
+import numpy as np
+import pytest
+
+from repro.core.dfl import capacity_periods, run_gossip, run_method
+from repro.core.baselines import TOPOLOGY_REGISTRY
+from repro.data.noniid import shard_partition
+from repro.data.synthetic import mnist_like
+from repro.models.small import MLPTask
+
+
+@pytest.fixture(scope="module")
+def task():
+    data = mnist_like(n_train=1200, n_test=400, seed=0)
+    part = shard_partition(data.y_train, num_clients=12, shards_per_client=3,
+                           seed=0)
+    return MLPTask(data, part, hidden=32, local_steps=2, batch=32)
+
+
+def test_capacity_periods_tiers():
+    p = capacity_periods(300, 10.0, seed=0)
+    vals = sorted(set(np.round(p, 6)))
+    assert np.allclose(vals, [10 * 2 / 3, 10.0, 20.0])
+
+
+def test_fedlay_learns_and_beats_isolated(task):
+    fed = run_method("fedlay", task, total_time=40.0, model_bytes=1000,
+                     base_period=1.0, seed=0)
+    iso_topo = TOPOLOGY_REGISTRY["ring"](task.num_clients)
+    # isolated = no edges: simulate with gossip over an empty topology
+    from repro.core.topology import Topology
+    empty = Topology(nodes=tuple(range(task.num_clients)), edges=frozenset())
+    iso = run_gossip(task, empty, capacity_periods(task.num_clients, 1.0),
+                     total_time=40.0, model_bytes=1000, seed=0)
+    assert fed.final_mean_acc > 0.5            # learns far above chance
+    assert fed.final_mean_acc > iso.final_mean_acc + 0.05
+    # convergence: accuracy increased over the run
+    assert fed.trace[-1].mean_acc > fed.trace[0].mean_acc + 0.2
+
+
+def test_fedavg_upper_bounds_fedlay(task):
+    """Paper Table III compares accuracy AT CONVERGENCE — FedAvg is paced
+    by the slowest client (rounds of max-period), so it gets a longer
+    wall-clock budget to converge; FedLay must land within a few points
+    of the centralized bound (and converge faster per unit time)."""
+    fed = run_method("fedlay", task, total_time=160.0, model_bytes=1000, seed=0)
+    avg = run_method("fedavg", task, total_time=160.0, model_bytes=1000, seed=0)
+    assert avg.final_mean_acc >= 0.8            # centralized bound converged
+    assert fed.final_mean_acc >= avg.final_mean_acc - 0.05
+    # FedLay's *time-to-accuracy* beats synchronized FedAvg (async claim)
+    avg_40 = run_method("fedavg", task, total_time=40.0, model_bytes=1000,
+                        seed=0)
+    assert fed.final_mean_acc >= avg_40.final_mean_acc - 0.02
+
+
+def test_fingerprint_suppression_counts(task):
+    res = run_method("fedlay", task, total_time=20.0, model_bytes=1000, seed=0)
+    assert res.suppressed_sends >= 0
+    assert res.messages_per_client > 0
+    assert res.comm_bytes_per_client == pytest.approx(
+        res.messages_per_client * 1000)
+
+
+def test_methods_registry_coverage(task):
+    for method in ("gaia", "dfl-dds", "chord", "ring", "fedlay-sync",
+                   "fedlay-noconf"):
+        res = run_method(method, task, total_time=10.0, model_bytes=1000,
+                         seed=0)
+        assert np.isfinite(res.final_mean_acc)
+
+
+def test_async_beats_sync_in_time_budget(task):
+    """Fig 12: per-client periods beat slowest-client pacing."""
+    sync = run_method("fedlay-sync", task, total_time=30.0, model_bytes=1000,
+                      seed=0)
+    asyn = run_method("fedlay", task, total_time=30.0, model_bytes=1000,
+                      seed=0)
+    assert asyn.local_steps_per_client >= sync.local_steps_per_client

@@ -1,0 +1,123 @@
+"""DFL-mode production bundle (the paper's technique as a train step)
+and the §Perf sharding knobs — build/lower sanity on the local mesh."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY, reduce_for_smoke
+from repro.dist import sharding as sharding_mod
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import dfl_train_bundle, serve_bundle
+from repro.models.config import INPUT_SHAPES
+from repro.optim.optimizers import adamw
+
+
+@pytest.fixture
+def small_shape():
+    return dataclasses.replace(INPUT_SHAPES["train_4k"], global_batch=2,
+                               seq_len=64)
+
+
+def test_dfl_bundle_builds_and_runs(small_shape):
+    """One-client DFL step on the local mesh: mixing degenerates to the
+    identity (self-weight 1) and the step must still train."""
+    cfg = reduce_for_smoke(REGISTRY["qwen3-4b"])
+    mesh = make_local_mesh(1, 1)
+    b = dfl_train_bundle(cfg, small_shape, mesh, adamw(1e-3),
+                         dtype=jnp.float32, sync="fedlay")
+    params_s, opt_s, batch_s = b.arg_shapes
+    # leading client dim present on every param leaf
+    for leaf in jax.tree.leaves(params_s):
+        assert leaf.shape[0] == 1
+    # run it for real (1 client, tiny batch)
+    rng = np.random.default_rng(0)
+    params = jax.tree.map(
+        lambda l: jnp.asarray(rng.normal(size=l.shape, scale=0.02),
+                              l.dtype), params_s)
+    opt_state = jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), opt_s)
+    batch = {k: jnp.asarray(rng.integers(0, cfg.vocab_size, v.shape),
+                            jnp.int32) for k, v in batch_s.items()}
+    new_p, new_o, metrics = b.step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    moved = any(float(jnp.abs(a - c).max()) > 0
+                for a, c in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_p)))
+    assert moved
+
+
+def test_dfl_bundle_allreduce_consensus(small_shape):
+    """allreduce sync forces exact consensus across the client dim."""
+    cfg = reduce_for_smoke(REGISTRY["llama3.2-3b"])
+    mesh = make_local_mesh(1, 1)
+    b = dfl_train_bundle(cfg, small_shape, mesh, adamw(1e-3),
+                         dtype=jnp.float32, sync="allreduce")
+    rng = np.random.default_rng(1)
+    params_s, opt_s, batch_s = b.arg_shapes
+    params = jax.tree.map(
+        lambda l: jnp.asarray(rng.normal(size=l.shape, scale=0.02),
+                              l.dtype), params_s)
+    opt_state = jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), opt_s)
+    batch = {k: jnp.asarray(rng.integers(0, cfg.vocab_size, v.shape),
+                            jnp.int32) for k, v in batch_s.items()}
+    new_p, _, m = b.step(params, opt_state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_serve_weight_stationary_specs(small_shape):
+    cfg = reduce_for_smoke(REGISTRY["qwen3-4b"])
+    mesh = make_local_mesh(1, 1)
+    shp = dataclasses.replace(INPUT_SHAPES["decode_32k"], global_batch=2,
+                              seq_len=64)
+    try:
+        steps_mod.SERVE_WEIGHT_STATIONARY = True
+        b = serve_bundle(cfg, shp, mesh, dtype=jnp.float32)
+        # no data-axis FSDP anywhere in the param specs
+        for spec in jax.tree.leaves(b.in_specs[0],
+                                    is_leaf=lambda x: isinstance(x, P)):
+            assert "data" not in [a for a in spec if a]
+    finally:
+        steps_mod.SERVE_WEIGHT_STATIONARY = False
+
+
+def test_cache_len_tp_specs():
+    from repro.dist.sharding import cache_specs
+    cache = {"seg0": {"sub0": {"kv": {
+        "k": jax.ShapeDtypeStruct((2, 4, 64, 8, 16), jnp.float32),
+        "v": jax.ShapeDtypeStruct((2, 4, 64, 8, 16), jnp.float32)}}},
+        "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    try:
+        sharding_mod.CACHE_LEN_TP = True
+        specs = cache_specs(cache, dp="data", tp="model", shard_batch=True)
+        assert specs["seg0"]["sub0"]["kv"]["k"] == \
+            P(None, "data", "model", None, None)
+    finally:
+        sharding_mod.CACHE_LEN_TP = False
+    specs = cache_specs(cache, dp="data", tp="model", shard_batch=True)
+    assert specs["seg0"]["sub0"]["kv"]["k"] == \
+        P(None, "data", None, "model", None)
+
+
+def test_bf16_cache_attention_knob_parity():
+    """The bf16c serving path matches the f32 baseline within bf16 tol."""
+    from repro.models import attention as att
+    from repro.models import layers
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, hd, L = 2, 8, 2, 32, 128
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, hd)).astype(np.float32))
+    ck = jnp.asarray(rng.normal(size=(B, L, Hkv, hd))).astype(jnp.bfloat16)
+    cv = jnp.asarray(rng.normal(size=(B, L, Hkv, hd))).astype(jnp.bfloat16)
+    base = att.cache_attention(q, ck, cv, 100)
+    try:
+        layers.F32_DOT_OUTPUT = False
+        fast = att.cache_attention(q, ck, cv, 100)
+    finally:
+        layers.F32_DOT_OUTPUT = True
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(fast, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,144 @@
+"""Distribution layer: sharding rules, divisibility enforcement, and the
+FedLay ppermute mixer — verified against the dense mixing matrix on an
+8-device host mesh (subprocess, so this test module's jax stays 1-dev)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (enforce_divisibility, param_specs,
+                                 spec_for_leaf)
+from repro.dist.sync import sync_bytes_per_client
+from repro.models import init_params
+from repro.models.config import ArchConfig, MoEConfig
+from repro.models.model import find_segments, layer_plan
+
+
+def small_cfg():
+    return ArchConfig(name="t", family="moe", num_layers=4, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=256, first_dense_layers=2,
+                      moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                                    num_shared=1))
+
+
+def test_param_specs_rules():
+    cfg = small_cfg()
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(params, fsdp="data", tp="model")
+    assert specs["embed"] == P("model", "data")
+    seg1 = specs["seg1"]["sub0"]          # the MoE segment
+    assert seg1["attn"]["wq"] == P(None, "data", "model")
+    assert seg1["attn"]["wo"] == P(None, "model", "data")
+    assert seg1["moe"]["w_gate"] == P(None, "model", "data", None)
+    assert seg1["moe"]["w_down"] == P(None, "model", None, "data")
+    # shared expert = dense rules, NOT expert-parallel
+    assert seg1["moe"]["shared"]["w_gate"] == P(None, "data", "model")
+    assert seg1["norm1"] == P(None, None)
+
+
+def test_dfl_client_axis_layout():
+    cfg = small_cfg()
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((8,) + l.shape, l.dtype), params)
+    specs = param_specs(stacked, client_axis="clients", tp="model")
+    assert specs["embed"] == P("clients", "model", None)   # no FSDP in DFL
+    assert specs["seg0"]["sub0"]["attn"]["wq"] == P("clients", None, None, "model")
+
+
+def test_enforce_divisibility():
+    specs = {"a": P("model", None), "b": P("data", "model")}
+    shapes = {"a": jax.ShapeDtypeStruct((8, 4), jnp.float32),     # 8 % 16 != 0
+              "b": jax.ShapeDtypeStruct((32, 64), jnp.float32)}
+    fixed = enforce_divisibility(specs, shapes, {"data": 16, "model": 16})
+    assert fixed["a"] == P(None, None)
+    assert fixed["b"] == P("data", "model")
+
+
+def test_sync_bytes_model():
+    mb = 1_000_000
+    assert sync_bytes_per_client("fedlay", mb, 16, num_spaces=3) == 6 * mb
+    assert sync_bytes_per_client("ring", mb, 16) == 2 * mb
+    assert sync_bytes_per_client("complete", mb, 16) == 15 * mb
+    ar = sync_bytes_per_client("allreduce", mb, 16)
+    assert 1.8 * mb <= ar <= 2 * mb
+    # the paper's claim: constant-degree fedlay beats complete graph and
+    # stays within a small factor of ring all-reduce
+    assert sync_bytes_per_client("fedlay", mb, 100, 3) < \
+        sync_bytes_per_client("complete", mb, 100)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax import shard_map
+    from repro.core.mixing import build_permute_schedule, schedule_mixing_matrix
+    from repro.dist.sync import make_mixer
+
+    n, dim = 8, 40
+    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    sched = build_permute_schedule(n, 3)
+    mixer = make_mixer("fedlay", sched, "data", n)
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    W = jnp.asarray(sched.weights)
+    S = jnp.asarray(sched.self_weight)
+
+    def body(x, w, s):
+        return mixer({"m": x}, w, s)["m"]
+
+    f = jax.jit(shard_map(body, mesh=mesh,
+                          in_specs=(P("data"), P("data"), P("data")),
+                          out_specs=P("data"), check_vma=False))
+    shard = NamedSharding(mesh, P("data"))
+    out = f(jax.device_put(X, shard), jax.device_put(W, shard),
+            jax.device_put(S, shard))
+    Wm = schedule_mixing_matrix(sched)
+    ref = Wm @ np.asarray(X)
+    err = float(np.abs(np.asarray(out) - ref).max())
+    print(json.dumps({"err": err}))
+""")
+
+
+def test_fedlay_ppermute_equals_dense_matrix():
+    """TPU-path mixing (shard_map + 2L ppermutes) ≡ W·X on 8 devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-2000:]
+    err = json.loads(res.stdout.strip().splitlines()[-1])["err"]
+    assert err < 1e-5
+
+
+def test_bundles_build_without_devices():
+    """Step bundles (specs + eval_shape) build on 1 CPU device."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import serve_bundle, train_bundle
+    from repro.models.config import INPUT_SHAPES, reduce_for_smoke
+    from repro.configs import REGISTRY
+    from repro.optim.optimizers import adamw
+    import dataclasses
+    cfg = reduce_for_smoke(REGISTRY["qwen3-4b"])
+    mesh = make_local_mesh(1, 1)
+    shp = dataclasses.replace(INPUT_SHAPES["train_4k"], global_batch=2,
+                              seq_len=64)
+    b = train_bundle(cfg, shp, mesh, adamw(1e-3), dtype=jnp.float32)
+    assert len(b.arg_shapes) == 3
+    shp2 = dataclasses.replace(INPUT_SHAPES["decode_32k"], global_batch=2,
+                               seq_len=64)
+    b2 = serve_bundle(cfg, shp2, mesh, dtype=jnp.float32)
+    assert "token" in b2.arg_shapes[2]

@@ -1,0 +1,164 @@
+"""Pallas kernel validation: interpret=True kernels vs pure-jnp oracles,
+swept over shapes and dtypes (hypothesis for the shape space)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import flash_decode, ssd_scan, weighted_mix
+from repro.kernels.ref import (flash_decode_ref, ssd_scan_ref,
+                               weighted_mix_ref)
+
+RNG = np.random.default_rng(0)
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# --------------------------------------------------------------------------
+# weighted_mix
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("K,N,bn", [(1, 128, 128), (3, 1000, 256),
+                                    (7, 4096, 1024), (13, 65536, 65536),
+                                    (5, 131, 128)])
+def test_weighted_mix_sweep(K, N, bn, dtype):
+    m = jnp.asarray(RNG.normal(size=(K, N)), dtype)
+    w = jnp.asarray(RNG.random(K).astype(np.float32))
+    w = w / w.sum()
+    out = weighted_mix(m, w, block_n=bn, interpret=True)
+    ref = weighted_mix_ref(m, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 10), st.integers(1, 3000), st.integers(0, 4))
+def test_weighted_mix_property(K, N, seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    w = jnp.asarray(rng.random(K).astype(np.float32) + 0.01)
+    out = weighted_mix(m, w, block_n=512, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(weighted_mix_ref(m, w)),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_weighted_mix_identity():
+    """Self-weight 1, neighbors 0 ⇒ output == own model exactly."""
+    m = jnp.asarray(RNG.normal(size=(4, 300)).astype(np.float32))
+    w = jnp.asarray([1.0, 0.0, 0.0, 0.0], jnp.float32)
+    out = weighted_mix(m, w, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(m[0]), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# flash_decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,hd,L,bl,pos", [
+    (1, 4, 1, 64, 256, 128, 255),
+    (2, 8, 2, 64, 700, 128, 450),      # unaligned L → padding path
+    (2, 16, 2, 128, 1024, 512, 100),   # pos masks most of the cache
+    (1, 8, 8, 64, 512, 256, 511),      # MHA (G=1)
+    (3, 8, 4, 32, 384, 128, 0),        # single valid slot
+])
+def test_flash_decode_sweep(B, Hq, Hkv, hd, L, bl, pos, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, hd)), dtype)
+    kc = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)), dtype)
+    vc = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)), dtype)
+    out = flash_decode(q, kc, vc, pos, block_l=bl, interpret=True)
+    ref = flash_decode_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([(4, 2), (8, 2), (4, 4)]),
+       st.integers(10, 500), st.integers(0, 5))
+def test_flash_decode_property(B, heads, L, seed):
+    Hq, Hkv = heads
+    hd = 32
+    rng = np.random.default_rng(seed)
+    pos = int(rng.integers(0, L))
+    q = jnp.asarray(rng.normal(size=(B, Hq, hd)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(B, L, Hkv, hd)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(B, L, Hkv, hd)).astype(np.float32))
+    out = flash_decode(q, kc, vc, pos, block_l=128, interpret=True)
+    ref = flash_decode_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_decode_matches_model_cache_attention():
+    """Kernel ≡ the model's cache_attention (the serving integration)."""
+    from repro.models.attention import cache_attention
+    B, Hq, Hkv, hd, L = 2, 8, 2, 64, 333
+    q = jnp.asarray(RNG.normal(size=(B, 1, Hq, hd)).astype(np.float32))
+    kc = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)).astype(np.float32))
+    vc = jnp.asarray(RNG.normal(size=(B, L, Hkv, hd)).astype(np.float32))
+    pos = 200
+    ref = cache_attention(q, kc, vc, pos)
+    out = flash_decode(q[:, 0], kc, vc, pos, block_l=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:, 0]),
+                               rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# ssd_scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 3, 16, 32, 32),
+    (2, 96, 2, 32, 16, 32),            # S not divisible by chunk → halves
+    (1, 256, 4, 64, 128, 64),          # production-ish tile
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), dtype)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))) * 0.2, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.normal(size=(H,))).astype(np.float32))
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd_scan_ref(x.astype(jnp.float32), dt, A,
+                       Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([32, 64, 96]),
+       st.integers(1, 3), st.integers(0, 5))
+def test_ssd_scan_property(B, S, H, seed):
+    rng = np.random.default_rng(seed)
+    P, N = 8, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, S, H))).astype(np.float32) * 0.3)
+    A = -jnp.asarray(np.abs(rng.normal(size=(H,))).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    ref = ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Different chunk sizes must give identical results."""
+    B, S, H, P, N = 1, 128, 2, 16, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))).astype(np.float32) * 0.2)
+    A = -jnp.asarray(np.abs(RNG.normal(size=(H,))).astype(np.float32))
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)).astype(np.float32))
+    o16 = ssd_scan(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    o64 = ssd_scan(x, dt, A, Bm, Cm, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o16), np.asarray(o64),
+                               rtol=1e-4, atol=1e-4)

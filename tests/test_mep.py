@@ -1,0 +1,88 @@
+"""MEP: confidence parameters, async periods, fingerprint dedup."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.mep import (ClientProfile, FingerprintTable,
+                            aggregation_weights, data_confidence,
+                            fine_grained_period, link_period,
+                            model_fingerprint, tier_period)
+
+
+def prof(cid, period, hist):
+    return ClientProfile(client_id=cid, period=period,
+                         label_histogram=np.asarray(hist, float))
+
+
+def test_data_confidence_uniform_is_one():
+    assert data_confidence(np.ones(10)) == pytest.approx(1.0)
+
+
+def test_data_confidence_decreases_with_skew():
+    c_uniform = data_confidence(np.ones(10))
+    c_two = data_confidence(np.array([5.0, 5.0] + [0.0] * 8))
+    c_one = data_confidence(np.array([10.0] + [0.0] * 9))
+    assert c_uniform > c_two > c_one > 0.0
+
+
+def test_link_period_is_max():
+    assert link_period(3.0, 5.0) == 5.0
+
+
+def test_fine_grained_period_requires_eta_gt_one():
+    assert fine_grained_period(10.0, eta=1.2) == pytest.approx(12.0)
+    with pytest.raises(ValueError):
+        fine_grained_period(10.0, eta=0.9)
+
+
+def test_tier_periods():
+    assert tier_period(60.0, "high") == pytest.approx(40.0)
+    assert tier_period(60.0, "medium") == 60.0
+    assert tier_period(60.0, "low") == 120.0
+
+
+@given(st.integers(1, 8), st.integers(0, 3))
+def test_aggregation_weights_simplex(n_nbrs, seed):
+    rng = np.random.default_rng(seed)
+    me = prof(0, 1.0 + rng.random(), rng.random(10) + 0.01)
+    nbrs = [prof(i + 1, 0.5 + rng.random() * 3, rng.random(10) + 0.01)
+            for i in range(n_nbrs)]
+    w = aggregation_weights(me, nbrs, 0.5, 0.5, True)
+    assert len(w) == n_nbrs + 1
+    assert np.all(np.asarray(w) >= 0)
+    assert np.sum(w) == pytest.approx(1.0)
+
+
+def test_confidence_weights_favor_rich_fast_clients():
+    """Higher data richness + shorter period ⇒ larger weight."""
+    me = prof(0, 1.0, np.ones(10))
+    rich_fast = prof(1, 0.5, np.ones(10))              # uniform data, fast
+    poor_slow = prof(2, 4.0, [10] + [0] * 9)           # skewed data, slow
+    w = aggregation_weights(me, [rich_fast, poor_slow], 0.5, 0.5, True)
+    assert w[1] > w[2]
+
+
+def test_simple_average_when_unweighted():
+    me = prof(0, 1.0, np.ones(4))
+    nbrs = [prof(1, 9.0, [4, 0, 0, 0]), prof(2, 0.1, np.ones(4))]
+    w = aggregation_weights(me, nbrs, 0.5, 0.5, False)
+    assert np.allclose(w, 1.0 / 3.0)
+
+
+def test_fingerprint_dedup():
+    t = FingerprintTable()
+    m1 = np.arange(10, dtype=np.float32)
+    f1 = model_fingerprint(m1)
+    assert t.should_send(5, f1)
+    t.record(5, f1)
+    assert not t.should_send(5, f1)          # duplicate suppressed
+    assert t.suppressed == 1
+    m2 = m1 + 1e-3
+    assert t.should_send(5, model_fingerprint(m2))   # changed model resends
+    assert t.should_send(6, f1)                      # other peer unaffected
+
+
+def test_fingerprint_deterministic():
+    m = np.random.default_rng(0).normal(size=100).astype(np.float32)
+    assert model_fingerprint(m) == model_fingerprint(m.copy())

@@ -1,0 +1,66 @@
+"""The three DFL topology metrics (paper §II-B)."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import TOPOLOGY_REGISTRY
+from repro.core.coords import NodeAddress
+from repro.core.metrics import (convergence_factor, evaluate_topology,
+                                metropolis_hastings_matrix, spectral_lambda,
+                                uniform_mixing_matrix)
+from repro.core.topology import fedlay_topology
+
+
+def _mh(topo):
+    return metropolis_hastings_matrix(topo.adjacency())
+
+
+def test_mh_matrix_doubly_stochastic_symmetric():
+    topo = fedlay_topology([NodeAddress.create(i, 3) for i in range(60)])
+    M = _mh(topo)
+    assert np.allclose(M.sum(0), 1.0) and np.allclose(M.sum(1), 1.0)
+    assert np.allclose(M, M.T)
+    assert (M >= -1e-12).all()
+
+
+def test_complete_graph_lambda_near_zero():
+    topo = TOPOLOGY_REGISTRY["complete"](20)
+    lam = spectral_lambda(_mh(topo))
+    # MH on K_n has second eigenvalue 1/n-ish
+    assert lam < 0.1
+
+
+def test_ring_mixes_slowly():
+    ring = TOPOLOGY_REGISTRY["ring"](64)
+    fed = fedlay_topology([NodeAddress.create(i, 3) for i in range(64)])
+    lam_ring = spectral_lambda(_mh(ring))
+    lam_fed = spectral_lambda(_mh(fed))
+    assert lam_fed < lam_ring  # paper: FedLay converges faster than ring
+    assert convergence_factor(fed) < convergence_factor(ring)
+
+
+def test_diameter_and_aspl_small_world():
+    rep = evaluate_topology(
+        fedlay_topology([NodeAddress.create(i, 3) for i in range(300)]))
+    # near-RRG with degree ~6 on 300 nodes: diameter stays logarithmic
+    assert rep.diameter <= 6
+    assert rep.avg_shortest_path <= 4.0
+    assert rep.connected
+
+
+def test_fedlay_close_to_best_random_regular():
+    """Fig 3 claim: FedLay ≈ best of random d-regular graphs."""
+    from repro.core.baselines import best_of_rrgs
+    n, L = 100, 3
+    fed = evaluate_topology(
+        fedlay_topology([NodeAddress.create(i, L) for i in range(n)]))
+    best = evaluate_topology(best_of_rrgs(n, 2 * L, trials=20))
+    assert fed.convergence_factor < 1.5 * best.convergence_factor
+    assert fed.diameter <= best.diameter + 1
+    assert fed.avg_shortest_path <= best.avg_shortest_path * 1.3
+
+
+def test_uniform_mixing_row_stochastic():
+    topo = TOPOLOGY_REGISTRY["ring"](16)
+    W = uniform_mixing_matrix(topo.adjacency())
+    assert np.allclose(W.sum(1), 1.0)

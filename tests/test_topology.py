@@ -1,0 +1,57 @@
+"""FedLay topology (Def. 1) and the correctness metric."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.coords import NodeAddress
+from repro.core.topology import (correct_neighbor_sets, correctness,
+                                 fedlay_topology, make_edge, ring_orders)
+
+
+@given(st.integers(3, 80), st.integers(1, 5), st.integers(0, 3))
+def test_degree_at_most_2L_and_connected(n, L, salt):
+    addrs = [NodeAddress.create(i, L, salt=str(salt)) for i in range(n)]
+    topo = fedlay_topology(addrs)
+    assert topo.is_connected()
+    degs = topo.degrees()
+    assert max(degs.values()) <= 2 * L
+    # every node has at least 2 neighbors (ring closure per space), n>=3
+    assert min(degs.values()) >= 2 if L >= 1 else True
+
+
+def test_correct_network_scores_one():
+    addrs = [NodeAddress.create(i, 3) for i in range(40)]
+    want = correct_neighbor_sets(addrs)
+    assert correctness(want, addrs) == 1.0
+
+
+def test_missing_and_stale_entries_reduce_correctness():
+    addrs = [NodeAddress.create(i, 3) for i in range(40)]
+    want = {u: set(v) for u, v in correct_neighbor_sets(addrs).items()}
+    # remove one entry
+    u = next(iter(want))
+    want[u].pop()
+    assert correctness(want, addrs) < 1.0
+    # stale extra entry also penalized
+    want2 = {u: set(v) for u, v in correct_neighbor_sets(addrs).items()}
+    v = next(iter(want2))
+    want2[v].add(10_000)
+    assert correctness(want2, addrs) < 1.0
+
+
+def test_make_edge_rejects_self_loop():
+    with pytest.raises(ValueError):
+        make_edge(3, 3)
+
+
+def test_ring_orders_consistent_with_topology():
+    addrs = [NodeAddress.create(i, 2) for i in range(25)]
+    topo = fedlay_topology(addrs)
+    orders = ring_orders(addrs)
+    edges = set()
+    for order in orders:
+        n = len(order)
+        for i in range(n):
+            edges.add(make_edge(order[i], order[(i + 1) % n]))
+    assert edges == set(topo.edges)
