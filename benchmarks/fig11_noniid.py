@@ -3,18 +3,19 @@ client 4 / 8 / 12 ⇒ more shards = closer to iid)."""
 
 from __future__ import annotations
 
-from repro.core.dfl import run_method
+from repro.core.dfl import Engine
 
 from .common import emit, mnist_task
 
 
 def run(quick: bool = False) -> None:
+    engine = Engine()
     shard_levels = (2, 4) if quick else (2, 4, 8)
     total = 25.0 if quick else 50.0
     for shards in shard_levels:
         task = mnist_task(n_clients=12, shards=shards)
         for method in ("fedlay", "fedavg", "gaia"):
-            res = run_method(method, task, total_time=total,
+            res = engine.run(task, method, total_time=total,
                              model_bytes=4096, seed=0)
             tr = res.trace
             emit("fig11", shards_per_client=shards, method=method,

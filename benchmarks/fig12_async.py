@@ -3,16 +3,17 @@
 
 from __future__ import annotations
 
-from repro.core.dfl import run_method
+from repro.core.dfl import Engine
 
 from .common import emit, mnist_task
 
 
 def run(quick: bool = False) -> None:
+    engine = Engine()
     total = 25.0 if quick else 50.0
     task = mnist_task()
     for method, label in (("fedlay", "async"), ("fedlay-sync", "sync")):
-        res = run_method(method, task, total_time=total, model_bytes=4096,
+        res = engine.run(task, method, total_time=total, model_bytes=4096,
                          seed=0)
         emit("fig12", mode=label, acc=round(res.final_mean_acc, 4),
              local_steps=round(res.local_steps_per_client, 1),

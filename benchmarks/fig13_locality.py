@@ -5,7 +5,7 @@ complete-graph upper bound, across degrees."""
 from __future__ import annotations
 
 from repro.core.baselines import TOPOLOGY_REGISTRY
-from repro.core.dfl import capacity_periods, run_gossip
+from repro.core.dfl import Engine, MethodSpec, capacity_periods
 from repro.data.noniid import biased_locality_partition
 from repro.data.synthetic import mnist_like
 from repro.models.small import MLPTask
@@ -23,17 +23,21 @@ def run(quick: bool = False) -> None:
     task = MLPTask(data, part, hidden=32, local_steps=2, batch=32)
     periods = capacity_periods(n, 1.0, seed=0)
 
+    engine = Engine()
     degrees = (4, 6) if quick else (4, 6, 10)
     for d in degrees:
-        topo = TOPOLOGY_REGISTRY["fedlay"](n, d // 2)
-        res = run_gossip(task, topo, periods, total, 4096, seed=0,
-                         method_name=f"fedlay-d{d}")
+        # FedLay at explicit degree 2L: an ad-hoc spec overriding the
+        # registered topology factory's num_spaces
+        spec = MethodSpec(name=f"fedlay-d{d}",
+                          topology=TOPOLOGY_REGISTRY["fedlay"](n, d // 2))
+        res = engine.run(task, spec, total_time=total, model_bytes=4096,
+                         periods=periods, seed=0)
         emit("fig13", topology="fedlay", degree=d,
              acc=round(res.final_mean_acc, 4))
     for name in ("chord", "complete"):
         topo = TOPOLOGY_REGISTRY[name](n)
-        res = run_gossip(task, topo, periods, total, 4096, seed=0,
-                         method_name=name)
+        res = engine.run(task, name, total_time=total, model_bytes=4096,
+                         periods=periods, seed=0)
         emit("fig13", topology=name,
              degree=round(sum(topo.degrees().values()) / n, 1),
              acc=round(res.final_mean_acc, 4))

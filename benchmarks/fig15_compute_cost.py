@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dfl import run_method
+from repro.core.dfl import Engine
 
 from .common import emit, mnist_task
 
@@ -20,7 +20,8 @@ def _steps_to_reach(res, target: float):
 def run(quick: bool = False) -> None:
     total = 30.0 if quick else 60.0
     task = mnist_task()
-    results = {m: run_method(m, task, total_time=total, model_bytes=4096,
+    engine = Engine()
+    results = {m: engine.run(task, m, total_time=total, model_bytes=4096,
                              seed=0)
                for m in ("fedavg", "fedlay", "gaia", "chord", "dfl-dds")}
     # target: 95% of FedAvg's final accuracy

@@ -3,18 +3,19 @@ average."""
 
 from __future__ import annotations
 
-from repro.core.dfl import run_method
+from repro.core.dfl import Engine
 
 from .common import emit, mnist_task
 
 
 def run(quick: bool = False) -> None:
+    engine = Engine()
     total = 25.0 if quick else 50.0
     # heavier skew so the confidence weights matter (paper's setting)
     task = mnist_task(n_clients=12, shards=2)
     for method, label in (("fedlay", "confidence"),
                           ("fedlay-noconf", "simple_average")):
-        res = run_method(method, task, total_time=total, model_bytes=4096,
+        res = engine.run(task, method, total_time=total, model_bytes=4096,
                          seed=0)
         emit("fig16", aggregation=label, acc=round(res.final_mean_acc, 4),
              min_acc=round(res.trace[-1].min_acc, 4))

@@ -7,7 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.baselines import TOPOLOGY_REGISTRY
-from repro.core.dfl import capacity_periods, run_gossip
+from repro.core.dfl import Engine, MethodSpec, capacity_periods
 
 from .common import emit, mnist_task
 
@@ -23,16 +23,19 @@ def run(quick: bool = False) -> None:
     # phase 1: only the first half trains — the not-yet-joined clients
     # are edgeless and dormant (period beyond the horizon)
     from repro.core.topology import Topology
+    engine = Engine()
     topo_old = TOPOLOGY_REGISTRY["fedlay"](n_old, 3)
     topo_p1 = Topology(nodes=tuple(range(n_total)), edges=topo_old.edges)
     periods_p1 = np.concatenate([periods[:n_old],
                                  np.full(n_old, 10 * t_join)])
-    res1 = run_gossip(task, topo_p1, periods_p1, total_time=t_join,
-                      model_bytes=4096, seed=0, method_name="phase1")
+    res1 = engine.run(task, MethodSpec(name="phase1", topology=topo_p1),
+                      total_time=t_join, model_bytes=4096, seed=0,
+                      periods=periods_p1)
     # phase 2: full network; new nodes start from init, old keep params
     topo_new = TOPOLOGY_REGISTRY["fedlay"](n_total, 3)
-    res2 = run_gossip(task, topo_new, periods, total_time=total - t_join,
-                      model_bytes=4096, seed=1, method_name="phase2",
+    res2 = engine.run(task, MethodSpec(name="phase2", topology=topo_new),
+                      total_time=total - t_join, model_bytes=4096, seed=1,
+                      periods=periods,
                       init_params=res1.final_params[:n_old]
                       + [task.init_params(0)] * n_old)
     for row in res2.trace:

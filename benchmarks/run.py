@@ -45,6 +45,10 @@ def main() -> int:
     args = ap.parse_args()
 
     names = list(MODULES) if not args.only else args.only.split(",")
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; "
+                 f"choose from {', '.join(MODULES)}")
     failures = []
     for name in names:
         mod = MODULES[name]

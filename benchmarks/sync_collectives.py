@@ -19,13 +19,13 @@ _PROBE = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
     from repro.core.mixing import build_permute_schedule
+    from repro.dist.compat import make_client_mesh, shard_map
     from repro.dist.sync import make_mixer
     from repro.launch.hlo_stats import collective_stats
 
     n, dim = 8, 1_000_000
-    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_client_mesh(n, "data")
     out = {}
     for strategy in ("fedlay", "allreduce", "ring"):
         sched = build_permute_schedule(n, 3)

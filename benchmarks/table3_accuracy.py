@@ -5,7 +5,7 @@ the FedLay-to-FedAvg gap)."""
 
 from __future__ import annotations
 
-from repro.core.dfl import run_method
+from repro.core.dfl import Engine
 
 from .common import cifar_task, emit, mnist_task, shakespeare_task
 
@@ -13,9 +13,10 @@ METHODS = ("fedlay", "fedavg", "gaia", "chord", "dfl-dds")
 
 
 def run_task(task_name: str, task, total_time: float, seed: int = 0) -> dict:
+    engine = Engine()
     out = {}
     for method in METHODS:
-        res = run_method(method, task, total_time=total_time,
+        res = engine.run(task, method, total_time=total_time,
                          model_bytes=4 * 1024, base_period=1.0, seed=seed)
         out[method] = res
         emit("table3", task=task_name, method=method,

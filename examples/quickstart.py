@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import (NodeAddress, Simulator, TOPOLOGY_REGISTRY,
                         evaluate_topology, fedlay_topology)
-from repro.core.dfl import run_method
+from repro.core.dfl import Engine
 from repro.data.noniid import shard_partition
 from repro.data.synthetic import mnist_like
 from repro.models.small import MLPTask
@@ -47,7 +47,7 @@ def main():
     data = mnist_like(n_train=800, n_test=300)
     part = shard_partition(data.y_train, num_clients=10, shards_per_client=3)
     task = MLPTask(data, part, hidden=32, local_steps=2)
-    res = run_method("fedlay", task, total_time=20.0, model_bytes=4096)
+    res = Engine().run(task, "fedlay", total_time=20.0, model_bytes=4096)
     print(f"DFL on non-iid shards: acc {res.trace[0].mean_acc:.2f} -> "
           f"{res.final_mean_acc:.2f} "
           f"({res.messages_per_client:.0f} msgs/client, "

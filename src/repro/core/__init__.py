@@ -14,7 +14,9 @@ from .mep import (ClientProfile, FingerprintTable, aggregation_weights,
 from .mixing import (PermuteSchedule, build_permute_schedule,
                      confidence_mixing_matrix, gossip_step,
                      schedule_mixing_matrix)
-from .dfl import RunResult, capacity_periods, run_gossip, run_method
+from .dfl import (METHOD_REGISTRY, Engine, MethodSpec, RunResult,
+                  capacity_periods, register_method, resolve_method,
+                  run_gossip, run_method)
 
 __all__ = [
     "NodeAddress", "circular_distance", "coordinate", "coordinates",
@@ -26,5 +28,7 @@ __all__ = [
     "data_confidence", "link_period", "model_fingerprint",
     "PermuteSchedule", "build_permute_schedule", "confidence_mixing_matrix",
     "gossip_step", "schedule_mixing_matrix",
-    "RunResult", "capacity_periods", "run_gossip", "run_method",
+    "METHOD_REGISTRY", "Engine", "MethodSpec", "RunResult",
+    "capacity_periods", "register_method", "resolve_method",
+    "run_gossip", "run_method",
 ]

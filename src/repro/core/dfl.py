@@ -1,10 +1,14 @@
-"""DFL training engines (paper §IV) — FedLay/MEP plus every comparison method.
+"""DFL execution engines (paper §IV) behind one registry front door.
 
-The engine is generic over a :class:`Task` (model init / local train /
-evaluate) so the same loop drives the paper's MLP/CNN/LSTM workloads and
-the synthetic stand-ins used in this offline container.
+A method is a :class:`MethodSpec` — engine kind, overlay topology
+factory, aggregation mode (MEP confidence weights vs simple average),
+and pacing (per-client async periods vs slowest-client sync rounds) —
+looked up in :data:`METHOD_REGISTRY` and executed by
+:meth:`Engine.run`, the single entry point shared by every benchmark and
+example.  Ablation variants compose as name suffixes in either order:
+``"fedlay-noconf-sync"`` ≡ ``"fedlay-sync-noconf"``.
 
-Methods implemented (paper §IV-A4):
+Registered methods (paper §IV-A4):
 
 * ``fedlay``   — DFL over the FedLay overlay, MEP confidence-weighted
   aggregation, asynchronous per-client periods (the paper's system);
@@ -14,11 +18,18 @@ Methods implemented (paper §IV-A4):
   graph across region servers, *simple* averaging (no non-iid handling);
 * ``dfl-dds``  — topology-free DFL between geographically close mobile
   nodes (random-waypoint proximity graph, simple average);
-* ``chord`` / ``ring`` / any registered topology — DFL gossip over that
-  overlay (used for the paper's Chord comparisons);
-* ``fedlay-sync`` — FedLay with synchronous rounds (Fig 12 ablation);
-* ``*-noconf``   — simple average instead of confidence weights
+* ``chord`` / ``ring`` / every other registered topology — DFL gossip
+  over that overlay (the paper's Chord comparisons);
+* ``*-sync``   — synchronous rounds (Fig 12 ablation);
+* ``*-noconf`` — simple average instead of confidence weights
   (Figs 16/17 ablation).
+
+The engine is generic over a :class:`Task` (model init / local train /
+evaluate), so the same loops drive the paper's MLP/CNN/LSTM workloads
+and the synthetic stand-ins used in this offline container.  The TPU
+image of the same mixing semantics lives in :mod:`repro.dist.sync`
+(static ``ppermute`` schedules compiled by
+:func:`repro.core.mixing.build_permute_schedule`).
 """
 
 from __future__ import annotations
@@ -26,7 +37,9 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+import warnings
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -96,7 +109,425 @@ def capacity_periods(n: int, base_period: float, seed: int = 0,
 
 
 # --------------------------------------------------------------------------
-# The asynchronous gossip engine (FedLay and topology baselines)
+# Method specs + registry
+# --------------------------------------------------------------------------
+
+#: Topology factory: (num_clients, num_spaces) -> Topology.  Baseline
+#: overlays ignore num_spaces; a pre-built Topology is also accepted.
+TopologyFactory = Callable[[int, int], Topology]
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """Everything the engine needs to run one DFL method.
+
+    ``engine`` selects the event loop: ``"gossip"`` (asynchronous
+    overlay gossip — FedLay and every topology baseline) or one of the
+    round-paced engines (``"fedavg"``, ``"gaia"``, ``"dfl-dds"``), which
+    are inherently synchronous and simple-averaging, so ``aggregation``
+    and ``pacing`` only steer the gossip engine.
+    """
+
+    name: str
+    engine: str = "gossip"
+    topology: Optional[Union[Topology, TopologyFactory]] = None
+    aggregation: str = "confidence"        # "confidence" | "simple"
+    pacing: str = "async"                  # "async" | "sync"
+    options: Tuple[Tuple[str, Any], ...] = ()
+
+    def variant(self, aggregation: Optional[str] = None,
+                pacing: Optional[str] = None) -> "MethodSpec":
+        """The ablation variant with its canonical suffixed name."""
+        agg = aggregation or self.aggregation
+        pace = pacing or self.pacing
+        name = (self.name + ("-noconf" if agg == "simple" and
+                             self.aggregation != "simple" else "")
+                + ("-sync" if pace == "sync" and
+                   self.pacing != "sync" else ""))
+        return dataclasses.replace(self, name=name, aggregation=agg,
+                                   pacing=pace)
+
+
+METHOD_REGISTRY: Dict[str, MethodSpec] = {}
+
+
+def register_method(spec: MethodSpec) -> MethodSpec:
+    METHOD_REGISTRY[spec.name] = spec
+    return spec
+
+
+def resolve_method(method: str) -> MethodSpec:
+    """Look up a method name, honoring ``-sync`` / ``-noconf`` suffixes
+    in either order (``fedlay-noconf-sync`` ≡ ``fedlay-sync-noconf``)."""
+    base, pacing, aggregation = method, None, None
+    stripped = True
+    while stripped:
+        stripped = False
+        if base.endswith("-sync"):
+            base, pacing, stripped = base[:-len("-sync")], "sync", True
+        elif base.endswith("-noconf"):
+            base, aggregation, stripped = base[:-len("-noconf")], "simple", True
+    spec = METHOD_REGISTRY.get(base)
+    if spec is None and base in TOPOLOGY_REGISTRY:
+        # call-time fallback: overlays added to TOPOLOGY_REGISTRY after
+        # this module imported are still runnable as gossip methods
+        factory = TOPOLOGY_REGISTRY[base]
+        spec = MethodSpec(base, topology=lambda n, L, _f=factory: _f(n))
+    if spec is None:
+        known = ", ".join(sorted(set(METHOD_REGISTRY) | set(TOPOLOGY_REGISTRY)))
+        raise ValueError(
+            f"unknown method {method!r} (base {base!r}); known methods: "
+            f"{known} — each optionally suffixed with '-sync' and/or "
+            f"'-noconf' in any order")
+    if aggregation or pacing:
+        spec = spec.variant(aggregation=aggregation, pacing=pacing)
+    return spec
+
+
+def _register_builtin_methods() -> None:
+    register_method(MethodSpec(
+        "fedlay",
+        topology=lambda n, L: TOPOLOGY_REGISTRY["fedlay"](n, L)))
+    register_method(MethodSpec("fedavg", engine="fedavg",
+                               aggregation="simple", pacing="sync"))
+    register_method(MethodSpec("gaia", engine="gaia",
+                               aggregation="simple", pacing="sync"))
+    register_method(MethodSpec("dfl-dds", engine="dfl-dds",
+                               aggregation="simple", pacing="sync"))
+    for topo_name, factory in TOPOLOGY_REGISTRY.items():
+        if topo_name == "fedlay":
+            continue
+        register_method(MethodSpec(
+            topo_name, topology=lambda n, L, _f=factory: _f(n)))
+
+
+# --------------------------------------------------------------------------
+# Shared run bookkeeping
+# --------------------------------------------------------------------------
+
+class _Recorder:
+    """Trace + per-client communication/compute counters, shared by every
+    engine loop (this is the scaffolding the four pre-registry loops each
+    duplicated)."""
+
+    def __init__(self, task: Task):
+        self.task = task
+        self.n = task.num_clients
+        self.trace: List[TraceRow] = []
+        self.bytes_sent = np.zeros(self.n)
+        self.msgs_sent = np.zeros(self.n)
+        self.local_steps = np.zeros(self.n)
+        self.suppressed = 0
+
+    def snapshot(self, t: float, params: Sequence[np.ndarray]) -> None:
+        cache: Dict[int, float] = {}      # distinct arrays evaluated once
+        for p in params:
+            if id(p) not in cache:
+                cache[id(p)] = self.task.evaluate(p)
+        accs = np.array([cache[id(p)] for p in params])
+        self.trace.append(TraceRow(
+            time=t, mean_acc=float(accs.mean()), min_acc=float(accs.min()),
+            max_acc=float(accs.max()), accs=accs))
+
+    def result(self, method: str, params: Sequence[np.ndarray]) -> RunResult:
+        return RunResult(
+            method=method, trace=self.trace,
+            comm_bytes_per_client=float(self.bytes_sent.mean()),
+            messages_per_client=float(self.msgs_sent.mean()),
+            suppressed_sends=int(self.suppressed),
+            local_steps_per_client=float(self.local_steps.mean()),
+            final_params=list(params))
+
+
+# --------------------------------------------------------------------------
+# Round-paced engines (centralized / clustered / mobility baselines)
+# --------------------------------------------------------------------------
+
+class _FedAvgRounds:
+    """Centralized FedAvg: the server averages all client models each
+    round (dataset-size weighted)."""
+
+    def __init__(self, task: Task, rec: _Recorder, rng: np.random.Generator,
+                 seed: int, model_bytes: int, round_time: float,
+                 options: Mapping[str, Any]):
+        self.task, self.rec, self.rng = task, rec, rng
+        self.model_bytes = model_bytes
+        n = task.num_clients
+        sw = np.array(options.get("sample_weights") if options.get(
+            "sample_weights") is not None else
+            [task.label_histogram(i).sum() for i in range(n)], np.float64)
+        self.sw = sw / sw.sum()
+        self.global_params = task.init_params(seed)
+
+    def round(self) -> None:
+        task, rng, n = self.task, self.rng, self.task.num_clients
+        locals_ = [task.local_train(self.global_params.copy(), u,
+                                    seed=int(rng.integers(2**31)))
+                   for u in range(n)]
+        self.global_params = np.sum(
+            [self.sw[u] * locals_[u] for u in range(n)], axis=0)
+        self.rec.bytes_sent += 2 * self.model_bytes   # up + down per client
+        self.rec.msgs_sent += 2
+        self.rec.local_steps += 1
+
+    def client_params(self) -> List[np.ndarray]:
+        return [self.global_params] * self.task.num_clients
+
+
+class _GaiaRounds:
+    """Gaia: FedAvg inside each geo region; region servers form a
+    complete graph and simple-average each round.  No non-iid handling."""
+
+    def __init__(self, task: Task, rec: _Recorder, rng: np.random.Generator,
+                 seed: int, model_bytes: int, round_time: float,
+                 options: Mapping[str, Any]):
+        self.task, self.rec, self.rng = task, rec, rng
+        self.model_bytes = model_bytes
+        self.num_regions = int(options.get("num_regions", 4))
+        self.region = np.arange(task.num_clients) % self.num_regions
+        self.region_params = [task.init_params(seed)
+                              for _ in range(self.num_regions)]
+
+    def round(self) -> None:
+        task, rng, mb = self.task, self.rng, self.model_bytes
+        n = task.num_clients
+        for r in range(self.num_regions):
+            members = np.nonzero(self.region == r)[0]
+            locals_ = [task.local_train(self.region_params[r].copy(), int(u),
+                                        seed=int(rng.integers(2**31)))
+                       for u in members]
+            self.region_params[r] = np.mean(locals_, axis=0)
+            self.rec.bytes_sent[members] += 2 * mb
+            self.rec.msgs_sent[members] += 2
+        self.rec.local_steps += 1
+        # inter-region complete-graph simple average (server-to-server)
+        mixed = np.mean(self.region_params, axis=0)
+        self.region_params = [mixed.copy() for _ in range(self.num_regions)]
+        self.rec.bytes_sent += mb * self.num_regions * (self.num_regions - 1) / n
+
+    def client_params(self) -> List[np.ndarray]:
+        return [self.region_params[self.region[u]]
+                for u in range(self.task.num_clients)]
+
+
+class _DflDdsRounds:
+    """DFL-DDS-style mobility DFL: nodes move (random waypoint) in the
+    unit square; each round a node simple-averages with nodes within
+    ``radius``."""
+
+    def __init__(self, task: Task, rec: _Recorder, rng: np.random.Generator,
+                 seed: int, model_bytes: int, round_time: float,
+                 options: Mapping[str, Any]):
+        self.task, self.rec, self.rng = task, rec, rng
+        self.model_bytes = model_bytes
+        self.radius = float(options.get("radius", 0.25))
+        self.round_time = round_time
+        n = task.num_clients
+        self.pos = rng.random((n, 2))
+        self.vel = (rng.random((n, 2)) - 0.5) * 0.2
+        self.params = [task.init_params(seed) for _ in range(n)]
+
+    def round(self) -> None:
+        task, rng, n = self.task, self.rng, self.task.num_clients
+        self.pos = (self.pos + self.vel * self.round_time) % 1.0
+        new_params = []
+        for u in range(n):
+            d = np.linalg.norm(self.pos - self.pos[u], axis=1)
+            nbr = [v for v in np.nonzero(d < self.radius)[0] if v != u]
+            group = [self.params[u]] + [self.params[v] for v in nbr]
+            agg = np.mean(group, axis=0)
+            new_params.append(task.local_train(
+                agg, u, seed=int(rng.integers(2**31))))
+            self.rec.bytes_sent[u] += self.model_bytes * len(nbr)
+            self.rec.msgs_sent[u] += len(nbr)
+        self.params = new_params
+        self.rec.local_steps += 1
+
+    def client_params(self) -> List[np.ndarray]:
+        return self.params
+
+
+_ROUND_ENGINES = {
+    "fedavg": _FedAvgRounds,
+    "gaia": _GaiaRounds,
+    "dfl-dds": _DflDdsRounds,
+}
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+
+class Engine:
+    """The single DFL execution front door.
+
+    ``Engine().run(task, "fedlay", total_time=..., model_bytes=...)``
+    runs any registered method (or an ad-hoc :class:`MethodSpec`) and
+    returns a :class:`RunResult`; the method string accepts the
+    ``-sync`` / ``-noconf`` ablation suffixes in any order.
+    """
+
+    def __init__(self, *, alpha_d: float = 0.5, alpha_c: float = 0.5):
+        self.alpha_d = alpha_d
+        self.alpha_c = alpha_c
+
+    def run(self, task: Task, method: Union[str, MethodSpec], *,
+            total_time: float, model_bytes: int, base_period: float = 1.0,
+            num_spaces: int = 3, periods: Optional[Sequence[float]] = None,
+            seed: int = 0, eval_every: float = 0.0,
+            init_params: Optional[List[np.ndarray]] = None) -> RunResult:
+        """Run one DFL method end to end.
+
+        ``periods`` overrides the paper's 3-tier heterogeneity model
+        (:func:`capacity_periods`); ``init_params`` warm-starts the
+        per-client models (churn experiments; gossip engine only).
+        ``eval_every`` paces gossip trace snapshots — round-paced
+        engines always snapshot once per round.
+        """
+        spec = resolve_method(method) if isinstance(method, str) else method
+        n = task.num_clients
+        if periods is None:
+            periods = capacity_periods(n, base_period, seed=seed)
+        periods = np.asarray(periods, dtype=np.float64)
+
+        if spec.engine == "gossip":
+            topo = spec.topology
+            if topo is None:
+                raise ValueError(
+                    f"gossip method {spec.name!r} needs a topology")
+            if not isinstance(topo, Topology):
+                topo = topo(n, num_spaces)
+            return self._run_gossip(task, spec, topo, periods,
+                                    total_time=total_time,
+                                    model_bytes=model_bytes, seed=seed,
+                                    eval_every=eval_every,
+                                    init_params=init_params)
+
+        impl_cls = _ROUND_ENGINES.get(spec.engine)
+        if impl_cls is None:
+            raise ValueError(
+                f"unknown engine {spec.engine!r} for method {spec.name!r}; "
+                f"expected 'gossip' or one of {sorted(_ROUND_ENGINES)}")
+        if init_params is not None:
+            raise ValueError(
+                f"init_params warm-start is only supported by the gossip "
+                f"engine, not {spec.engine!r}")
+        return self._run_rounds(task, spec, impl_cls, periods,
+                                total_time=total_time,
+                                model_bytes=model_bytes, seed=seed)
+
+    # -- round-paced loop (fedavg / gaia / dfl-dds) ------------------------
+
+    def _run_rounds(self, task: Task, spec: MethodSpec, impl_cls, periods,
+                    *, total_time: float, model_bytes: int,
+                    seed: int) -> RunResult:
+        """Synchronous rounds paced by the slowest client — the one loop
+        behind every centralized/clustered baseline."""
+        rec = _Recorder(task)
+        rng = np.random.default_rng(seed)
+        round_time = float(np.max(periods))
+        impl = impl_cls(task, rec, rng, seed, model_bytes, round_time,
+                        dict(spec.options))
+        rec.snapshot(0.0, impl.client_params())
+        t = 0.0
+        while t + round_time <= total_time:
+            t += round_time
+            impl.round()
+            rec.snapshot(t, impl.client_params())
+        return rec.result(spec.name, impl.client_params())
+
+    # -- asynchronous gossip loop (FedLay and topology baselines) ----------
+
+    def _run_gossip(self, task: Task, spec: MethodSpec, topology: Topology,
+                    periods, *, total_time: float, model_bytes: int,
+                    seed: int, eval_every: float,
+                    init_params: Optional[List[np.ndarray]]) -> RunResult:
+        """Event-driven asynchronous DFL gossip (MEP semantics).
+
+        Every client u wakes at its own period T_u (sync pacing: all
+        clients paced by max T): aggregate the latest models received
+        from neighbors with confidence weights, run local training, then
+        send the new model to each neighbor unless (a) the per-link
+        period max(T_u,T_v) has not elapsed or (b) the fingerprint is
+        unchanged.
+        """
+        n = task.num_clients
+        confidence_weighted = spec.aggregation != "simple"
+        rng = np.random.default_rng(seed)
+        nbrs = topology.neighbor_map()
+        profiles = make_profiles(task, periods)
+        if spec.pacing == "sync":
+            periods = np.full(n, float(np.max(periods)))
+
+        if init_params is not None:
+            assert len(init_params) == n
+            params: List[np.ndarray] = [p.copy() for p in init_params]
+            task.init_params(seed)   # ensure the task's unflatten spec exists
+        else:
+            params = [task.init_params(seed) for _ in range(n)]
+        inbox: List[Dict[int, np.ndarray]] = [dict() for _ in range(n)]
+        fingerprints = [FingerprintTable() for _ in range(n)]
+        last_link_send: Dict[Tuple[int, int], float] = {}
+        rec = _Recorder(task)
+
+        heap: List[Tuple[float, int, int]] = []
+        counter = itertools.count()
+        for u in range(n):
+            heapq.heappush(heap, (float(periods[u]) * (0.5 + 0.5 * rng.random()),
+                                  next(counter), u))
+
+        eval_every = eval_every or max(float(np.max(periods)), total_time / 20.0)
+        rec.snapshot(0.0, params)
+        next_eval = eval_every
+        now = 0.0
+        while heap and heap[0][0] <= total_time:
+            now, _, u = heapq.heappop(heap)
+            while next_eval <= now:
+                rec.snapshot(next_eval, params)
+                next_eval += eval_every
+            # 1) MEP aggregation over {u} ∪ received neighbor models
+            rx = [(v, m) for v, m in inbox[u].items()]
+            if rx:
+                w = aggregation_weights(profiles[u],
+                                        [profiles[v] for v, _ in rx],
+                                        self.alpha_d, self.alpha_c,
+                                        confidence_weighted)
+                agg = w[0] * params[u]
+                for k, (_, m) in enumerate(rx):
+                    agg = agg + w[k + 1] * m
+                params[u] = agg
+            # 2) local training
+            params[u] = task.local_train(params[u], u,
+                                         seed=int(rng.integers(2**31)))
+            rec.local_steps[u] += 1
+            # 3) push to neighbors (link period + fingerprint suppression)
+            fp = model_fingerprint(params[u])
+            for v in nbrs[u]:
+                lp = link_period(float(periods[u]), float(periods[v]))
+                last = last_link_send.get((u, v), -np.inf)
+                if now - last < lp * 0.999:
+                    continue
+                if not fingerprints[u].should_send(v, fp):
+                    continue
+                fingerprints[u].record(v, fp)
+                inbox[v][u] = params[u].copy()
+                last_link_send[(u, v)] = now
+                rec.bytes_sent[u] += model_bytes
+                rec.msgs_sent[u] += 1
+            heapq.heappush(heap, (now + float(periods[u]), next(counter), u))
+        while next_eval <= total_time:
+            rec.snapshot(next_eval, params)
+            next_eval += eval_every
+
+        rec.suppressed = sum(f.suppressed for f in fingerprints)
+        return rec.result(spec.name, params)
+
+
+_register_builtin_methods()
+
+
+# --------------------------------------------------------------------------
+# Compatibility wrappers
 # --------------------------------------------------------------------------
 
 def run_gossip(task: Task, topology: Topology, periods: Sequence[float],
@@ -107,252 +538,32 @@ def run_gossip(task: Task, topology: Topology, periods: Sequence[float],
                eval_every: float = 0.0, seed: int = 0,
                method_name: str = "gossip",
                init_params: Optional[List[np.ndarray]] = None) -> RunResult:
-    """Event-driven asynchronous DFL gossip (MEP semantics).
+    """Gossip over an explicit topology — sugar for :meth:`Engine.run`
+    with an ad-hoc :class:`MethodSpec` (custom overlays, churn phases)."""
+    spec = MethodSpec(
+        name=method_name, engine="gossip", topology=topology,
+        aggregation="confidence" if confidence_weighted else "simple",
+        pacing="sync" if synchronous else "async")
+    return Engine(alpha_d=alpha_d, alpha_c=alpha_c).run(
+        task, spec, total_time=total_time, model_bytes=model_bytes,
+        periods=periods, seed=seed, eval_every=eval_every,
+        init_params=init_params)
 
-    Every client u wakes at its own period T_u (synchronous mode: all
-    clients paced by max T): aggregate the latest models received from
-    neighbors with confidence weights, run local training, then send the
-    new model to each neighbor unless (a) the per-link period
-    max(T_u,T_v) has not elapsed or (b) the fingerprint is unchanged.
-    """
-    n = task.num_clients
-    rng = np.random.default_rng(seed)
-    nbrs = topology.neighbor_map()
-    profiles = make_profiles(task, periods)
-    if synchronous:
-        periods = np.full(n, float(np.max(periods)))
-
-    if init_params is not None:
-        assert len(init_params) == n
-        params: List[np.ndarray] = [p.copy() for p in init_params]
-        task.init_params(seed)   # ensure the task's unflatten spec exists
-    else:
-        params = [task.init_params(seed) for _ in range(n)]
-    inbox: List[Dict[int, np.ndarray]] = [dict() for _ in range(n)]
-    fingerprints = [FingerprintTable() for _ in range(n)]
-    last_link_send: Dict[Tuple[int, int], float] = {}
-    bytes_sent = np.zeros(n)
-    msgs_sent = np.zeros(n)
-    local_steps = np.zeros(n)
-
-    heap: List[Tuple[float, int, int]] = []
-    counter = itertools.count()
-    for u in range(n):
-        heapq.heappush(heap, (float(periods[u]) * (0.5 + 0.5 * rng.random()),
-                              next(counter), u))
-
-    trace: List[TraceRow] = []
-    eval_every = eval_every or max(float(np.max(periods)), total_time / 20.0)
-    next_eval = 0.0
-
-    def snapshot(t: float) -> None:
-        accs = np.array([task.evaluate(p) for p in params])
-        trace.append(TraceRow(time=t, mean_acc=float(accs.mean()),
-                              min_acc=float(accs.min()), max_acc=float(accs.max()),
-                              accs=accs))
-
-    snapshot(0.0)
-    next_eval = eval_every
-    now = 0.0
-    while heap and heap[0][0] <= total_time:
-        now, _, u = heapq.heappop(heap)
-        while next_eval <= now:
-            snapshot(next_eval)
-            next_eval += eval_every
-        # 1) MEP aggregation over {u} ∪ received neighbor models
-        rx = [(v, m) for v, m in inbox[u].items()]
-        if rx:
-            w = aggregation_weights(profiles[u], [profiles[v] for v, _ in rx],
-                                    alpha_d, alpha_c, confidence_weighted)
-            agg = w[0] * params[u]
-            for k, (_, m) in enumerate(rx):
-                agg = agg + w[k + 1] * m
-            params[u] = agg
-        # 2) local training
-        params[u] = task.local_train(params[u], u, seed=int(rng.integers(2**31)))
-        local_steps[u] += 1
-        # 3) push to neighbors (link period + fingerprint suppression)
-        fp = model_fingerprint(params[u])
-        for v in nbrs[u]:
-            lp = link_period(float(periods[u]), float(periods[v]))
-            last = last_link_send.get((u, v), -np.inf)
-            if now - last < lp * 0.999:
-                continue
-            if not fingerprints[u].should_send(v, fp):
-                continue
-            fingerprints[u].record(v, fp)
-            inbox[v][u] = params[u].copy()
-            last_link_send[(u, v)] = now
-            bytes_sent[u] += model_bytes
-            msgs_sent[u] += 1
-        heapq.heappush(heap, (now + float(periods[u]), next(counter), u))
-    while next_eval <= total_time:
-        snapshot(next_eval)
-        next_eval += eval_every
-
-    return RunResult(
-        method=method_name, trace=trace,
-        comm_bytes_per_client=float(bytes_sent.mean()),
-        messages_per_client=float(msgs_sent.mean()),
-        suppressed_sends=int(sum(f.suppressed for f in fingerprints)),
-        local_steps_per_client=float(local_steps.mean()),
-        final_params=params,
-    )
-
-
-# --------------------------------------------------------------------------
-# Centralized / clustered baselines
-# --------------------------------------------------------------------------
-
-def run_fedavg(task: Task, periods: Sequence[float], total_time: float,
-               model_bytes: int, seed: int = 0,
-               sample_weights: Optional[np.ndarray] = None) -> RunResult:
-    """Centralized FedAvg: synchronous rounds paced by the slowest client;
-    the server averages all client models (dataset-size weighted)."""
-    n = task.num_clients
-    rng = np.random.default_rng(seed)
-    round_time = float(np.max(periods))
-    if sample_weights is None:
-        sample_weights = np.array([task.label_histogram(i).sum() for i in range(n)],
-                                  dtype=np.float64)
-    sw = sample_weights / sample_weights.sum()
-    global_params = task.init_params(seed)
-    trace = [TraceRow(0.0, task.evaluate(global_params),
-                      task.evaluate(global_params), task.evaluate(global_params))]
-    t = 0.0
-    bytes_sent = 0.0
-    msgs = 0.0
-    steps = 0.0
-    while t + round_time <= total_time:
-        t += round_time
-        locals_ = [task.local_train(global_params.copy(), u,
-                                    seed=int(rng.integers(2**31))) for u in range(n)]
-        steps += 1
-        global_params = np.sum([sw[u] * locals_[u] for u in range(n)], axis=0)
-        bytes_sent += 2 * model_bytes  # up + down per client
-        msgs += 2
-        acc = task.evaluate(global_params)
-        trace.append(TraceRow(t, acc, acc, acc))
-    return RunResult(method="fedavg", trace=trace,
-                     comm_bytes_per_client=bytes_sent,
-                     messages_per_client=msgs, suppressed_sends=0,
-                     local_steps_per_client=steps,
-                     final_params=[global_params] * n)
-
-
-def run_gaia(task: Task, periods: Sequence[float], total_time: float,
-             model_bytes: int, num_regions: int = 4, seed: int = 0) -> RunResult:
-    """Gaia: FedAvg inside each geo region; region servers form a complete
-    graph and simple-average each round.  No non-iid handling."""
-    n = task.num_clients
-    rng = np.random.default_rng(seed)
-    region = np.arange(n) % num_regions
-    round_time = float(np.max(periods))
-    region_params = [task.init_params(seed) for _ in range(num_regions)]
-    t = 0.0
-    bytes_sent = 0.0
-    msgs = 0.0
-    steps = 0.0
-    trace = []
-
-    def snapshot(t):
-        accs = np.array([task.evaluate(region_params[region[u]]) for u in range(n)])
-        trace.append(TraceRow(t, float(accs.mean()), float(accs.min()), float(accs.max()),
-                              accs=accs))
-
-    snapshot(0.0)
-    while t + round_time <= total_time:
-        t += round_time
-        # intra-region FedAvg
-        for r in range(num_regions):
-            members = np.nonzero(region == r)[0]
-            locals_ = [task.local_train(region_params[r].copy(), int(u),
-                                        seed=int(rng.integers(2**31))) for u in members]
-            region_params[r] = np.mean(locals_, axis=0)
-            bytes_sent += 2 * model_bytes * len(members)
-            msgs += 2 * len(members)
-        steps += 1
-        # inter-region complete-graph simple average (server-to-server)
-        mixed = np.mean(region_params, axis=0)
-        region_params = [mixed.copy() for _ in range(num_regions)]
-        bytes_sent += model_bytes * num_regions * (num_regions - 1)
-        snapshot(t)
-    return RunResult(method="gaia", trace=trace,
-                     comm_bytes_per_client=bytes_sent / n,
-                     messages_per_client=msgs / n, suppressed_sends=0,
-                     local_steps_per_client=steps,
-                     final_params=[region_params[region[u]] for u in range(n)])
-
-
-def run_dfl_dds(task: Task, periods: Sequence[float], total_time: float,
-                model_bytes: int, radius: float = 0.25, seed: int = 0) -> RunResult:
-    """DFL-DDS-style mobility DFL: nodes move (random waypoint) in the unit
-    square; each round a node simple-averages with nodes within ``radius``."""
-    n = task.num_clients
-    rng = np.random.default_rng(seed)
-    pos = rng.random((n, 2))
-    vel = (rng.random((n, 2)) - 0.5) * 0.2
-    round_time = float(np.max(periods))
-    params = [task.init_params(seed) for _ in range(n)]
-    t = 0.0
-    bytes_sent = np.zeros(n)
-    msgs = np.zeros(n)
-    steps = 0.0
-    trace = []
-
-    def snapshot(t):
-        accs = np.array([task.evaluate(p) for p in params])
-        trace.append(TraceRow(t, float(accs.mean()), float(accs.min()),
-                              float(accs.max()), accs=accs))
-
-    snapshot(0.0)
-    while t + round_time <= total_time:
-        t += round_time
-        pos = (pos + vel * round_time) % 1.0
-        new_params = []
-        for u in range(n):
-            d = np.linalg.norm(pos - pos[u], axis=1)
-            nbr = [v for v in np.nonzero(d < radius)[0] if v != u]
-            group = [params[u]] + [params[v] for v in nbr]
-            agg = np.mean(group, axis=0)
-            new_params.append(task.local_train(agg, u, seed=int(rng.integers(2**31))))
-            bytes_sent[u] += model_bytes * len(nbr)
-            msgs[u] += len(nbr)
-        params = new_params
-        steps += 1
-        snapshot(t)
-    return RunResult(method="dfl-dds", trace=trace,
-                     comm_bytes_per_client=float(bytes_sent.mean()),
-                     messages_per_client=float(msgs.mean()), suppressed_sends=0,
-                     local_steps_per_client=steps, final_params=params)
-
-
-# --------------------------------------------------------------------------
-# Front door
-# --------------------------------------------------------------------------
 
 def run_method(method: str, task: Task, total_time: float, model_bytes: int,
                base_period: float = 1.0, num_spaces: int = 3, degree: int = 0,
                seed: int = 0, eval_every: float = 0.0) -> RunResult:
-    """Run one DFL method end to end with the paper's heterogeneity model."""
-    n = task.num_clients
-    periods = capacity_periods(n, base_period, seed=seed)
-    if method == "fedavg":
-        return run_fedavg(task, periods, total_time, model_bytes, seed)
-    if method == "gaia":
-        return run_gaia(task, periods, total_time, model_bytes, seed=seed)
-    if method == "dfl-dds":
-        return run_dfl_dds(task, periods, total_time, model_bytes, seed=seed)
+    """Deprecated string front door.
 
-    sync = method.endswith("-sync")
-    noconf = "-noconf" in method
-    base = method.replace("-sync", "").replace("-noconf", "")
-    if base == "fedlay":
-        topo = TOPOLOGY_REGISTRY["fedlay"](n, num_spaces)
-    elif base in TOPOLOGY_REGISTRY:
-        topo = TOPOLOGY_REGISTRY[base](n)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return run_gossip(task, topo, periods, total_time, model_bytes,
-                      confidence_weighted=not noconf, synchronous=sync,
-                      eval_every=eval_every, seed=seed, method_name=method)
+    Use ``Engine().run(task, method, ...)`` instead — this shim resolves
+    the same method names (including suffix variants, now in either
+    order) through :data:`METHOD_REGISTRY` and will be removed once
+    nothing imports it.  ``degree`` was always ignored and remains so.
+    """
+    warnings.warn(
+        "run_method is deprecated; use repro.core.dfl.Engine().run(task, "
+        "method, ...)", DeprecationWarning, stacklevel=2)
+    return Engine().run(task, method, total_time=total_time,
+                        model_bytes=model_bytes, base_period=base_period,
+                        num_spaces=num_spaces, seed=seed,
+                        eval_every=eval_every)

@@ -2,15 +2,18 @@
 
 Two consumers:
 
-* the **simulation path** (`repro.core.dfl`) applies the row-stochastic
-  confidence-weighted mixing matrix to stacked client models, and
-* the **TPU path** (`repro.dist.sync`) compiles the same FedLay overlay
+* the **simulation path** (:class:`repro.core.dfl.Engine`) applies the
+  row-stochastic confidence-weighted mixing matrix to stacked client
+  models, and
+* the **TPU path** (:func:`repro.dist.sync.make_mixer` /
+  :func:`repro.dist.sync.global_mixer`) compiles the same FedLay overlay
   into 2L static ring rotations: each virtual ring space is a cyclic
   order over the mesh's data positions, so one space = one ``ppermute``
   rotation in each direction.  Confidence weights and duplicate-
   adjacency masks (a peer adjacent in several spaces is counted once —
   the bulk-synchronous image of MEP fingerprint dedup) are precomputed
   host-side into dense per-device weight tables.
+  ``tests/test_dist.py`` pins the two paths equal.
 """
 
 from __future__ import annotations
@@ -62,7 +65,9 @@ def gossip_step(stacked_models: np.ndarray, W: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class PermuteSchedule:
-    """Everything `repro.dist.sync.fedlay_mix` needs, all host-side static.
+    """Everything :func:`repro.dist.sync.fedlay_mix` (shard_map path) and
+    :func:`repro.dist.sync.global_mixer` (auto-sharded path) need, all
+    host-side static.
 
     ``perms[k]`` is the source-permutation of the k-th incoming slot:
     device ``i`` receives the model held by device ``perms[k][i]``.

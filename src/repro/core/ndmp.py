@@ -21,7 +21,10 @@ NDMP is a host-side control protocol in any real deployment (it speaks
 TCP, not ICI), so on TPU it stays host-side: the simulator is exact —
 per-message latencies, per-node clocks, no global knowledge — and its
 converged neighbor tables are what the distribution layer compiles into
-static ``ppermute`` schedules (see ``repro/dist/sync.py``).
+static ``ppermute`` schedules
+(:func:`repro.core.mixing.build_permute_schedule` →
+:func:`repro.dist.sync.make_mixer`; churn-triggered recompilation of a
+live schedule is an open ROADMAP item).
 """
 
 from __future__ import annotations

@@ -1,0 +1,29 @@
+"""The distribution layer: host-side overlay artifacts compiled into
+on-device sharding + collective programs.
+
+Two modules:
+
+* :mod:`repro.dist.sharding` — PartitionSpec rules for every parameter /
+  cache / batch pytree (FSDP, tensor-parallel, expert-parallel, and the
+  DFL client axis), plus divisibility enforcement against a mesh.
+* :mod:`repro.dist.sync` — the FedLay overlay compiled into static
+  ``ppermute`` mixing (the TPU image of the paper's NDMP neighbor
+  tables), the all-reduce / ring / none baselines, and the paper's
+  per-client communication accounting.
+"""
+
+from . import compat, sharding, sync
+from .compat import make_client_mesh, shard_map
+from .sharding import (batch_spec, cache_specs, enforce_divisibility,
+                       param_specs, spec_for_leaf)
+from .sync import (fedlay_mix, global_mixer, make_mixer, ring_schedule,
+                   sync_bytes_per_client)
+
+__all__ = [
+    "compat", "sharding", "sync",
+    "make_client_mesh", "shard_map",
+    "batch_spec", "cache_specs", "enforce_divisibility", "param_specs",
+    "spec_for_leaf",
+    "fedlay_mix", "global_mixer", "make_mixer", "ring_schedule",
+    "sync_bytes_per_client",
+]

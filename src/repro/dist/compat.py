@@ -1,0 +1,60 @@
+"""jax version compatibility for the distribution layer.
+
+The APIs the dist layer leans on drifted across jax releases:
+``shard_map`` moved from ``jax.experimental`` to the top level and its
+replication-check kwarg renamed ``check_rep`` → ``check_vma``;
+``jax.make_mesh`` grew an ``axis_types`` kwarg (with
+``jax.sharding.AxisType``).  Everything in-repo (and the subprocess
+probes in tests/benchmarks) goes through these wrappers so one tree runs
+on both API generations.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                     # older jax: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The kwarg rename (check_rep → check_vma) happened independently of the
+# export move, so probe the signature rather than the import location.
+_CHECK_KW = ("check_vma" if "check_vma" in
+             inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` across API generations (``check_vma`` maps onto
+    ``check_rep`` for older jax)."""
+    kwargs = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` where supported, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with auto axis types when the kwarg exists."""
+    kwargs = {} if devices is None else {"devices": devices}
+    types = auto_axis_types(len(tuple(axis_names)))
+    if types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=types, **kwargs)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def make_client_mesh(num_clients: int, axis_name: str = "data"):
+    """The 1-axis client mesh every DFL shard_map program runs on."""
+    return make_mesh((num_clients,), (axis_name,))

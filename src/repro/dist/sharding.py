@@ -1,0 +1,186 @@
+"""PartitionSpec rules for every pytree the launch layer shards.
+
+One rule set, four layouts:
+
+* **FSDP + TP** (centralized train/prefill): matmul weights shard their
+  d_model-ish dim over the ``fsdp`` axis and their parallel dim over the
+  ``tp`` axis (column-parallel in-projections, row-parallel
+  out-projections, Megatron-style).
+* **Expert parallelism**: MoE expert stacks shard the expert dim over
+  the ``tp`` axis (experts are data-parallel internally), the shared
+  expert follows dense rules.
+* **Serving**: cache specs shard batch over ``dp`` and KV heads over
+  ``tp`` (or cache length, under the :data:`CACHE_LEN_TP` knob).
+* **DFL client axis**: every leaf gains a leading client dim sharded
+  over ``client_axis``; clients own their full replica, so FSDP is off
+  and only TP applies inside the replica.
+
+``enforce_divisibility`` drops any axis whose size does not divide the
+corresponding dim — GSPMD would otherwise pad-and-mask, which is never
+what a benchmark wants to measure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+# Perf knob (§Perf hillclimb): serving caches shard the KV-head dim over
+# the tp axis by default — at few KV heads (GQA) that caps tp
+# utilization.  True shards the cache *length* dim instead (ring-style
+# attention over fragments), trading an all-gather of the query per step
+# for full-width cache parallelism.  Baseline = False.
+CACHE_LEN_TP = False
+
+#: Column-parallel in-projections: (d_in over fsdp, d_out over tp).
+_COLUMN = frozenset({"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b",
+                     "w_gate", "w_up", "in_proj"})
+#: Row-parallel out-projections: (d_in over tp, d_out over fsdp).
+_ROW = frozenset({"wo", "w_down", "out_proj"})
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for entry in path:
+        if isinstance(entry, str):
+            names.append(entry)
+        elif hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+        elif hasattr(entry, "idx"):
+            names.append(str(entry.idx))
+        else:
+            names.append(str(entry))
+    return tuple(names)
+
+
+def spec_for_leaf(path, leaf, *, fsdp: Optional[str] = None,
+                  tp: Optional[str] = None) -> P:
+    """Base PartitionSpec of one parameter leaf (no leading stack dims).
+
+    ``path`` is a sequence of pytree keys (strings or jax KeyPath
+    entries); the last entry names the parameter, earlier entries give
+    context (expert weights live under ``moe`` but not ``shared``).
+    """
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    in_expert = "moe" in names[:-1] and "shared" not in names
+    if name in ("embed", "lm_head"):
+        return P(tp, fsdp)                       # (vocab, d_model)
+    if name == "mtp_proj":
+        return P(fsdp, tp)                       # (2·d_model, d_model)
+    if in_expert:
+        if name == "router":
+            return P(fsdp, None)                 # (d_model, E) — tiny, f32
+        if name in ("w_gate", "w_up"):
+            return P(tp, fsdp, None)             # (E, d_model, d_ff_e)
+        if name == "w_down":
+            return P(tp, None, fsdp)             # (E, d_ff_e, d_model)
+    if name == "conv_w":
+        return P(None, tp)                       # (d_conv, channels)
+    if name in _COLUMN:
+        return P(fsdp, tp)
+    if name in _ROW:
+        return P(tp, fsdp)
+    # norms, biases, gates, A_log/D, anything 1-D: replicated
+    return P(None) if leaf.ndim >= 1 else P()
+
+
+def param_specs(params, fsdp: Optional[str] = None, tp: Optional[str] = None,
+                client_axis: Optional[str] = None):
+    """PartitionSpecs for a parameter pytree (or any stacked image of it).
+
+    Leading dims beyond a leaf's base rank are stack dims: segment scan
+    stacks get ``None``; with ``client_axis`` the outermost stack dim is
+    the DFL client dim, sharded over that axis, and FSDP is disabled
+    (each client owns its whole replica — the paper's deployment model).
+    """
+    if client_axis is not None:
+        fsdp = None
+
+    def one(path, leaf):
+        base = tuple(spec_for_leaf(path, leaf, fsdp=fsdp, tp=tp))
+        pad = leaf.ndim - len(base)
+        if pad <= 0:
+            return P(*base[len(base) - leaf.ndim:])
+        if client_axis is not None:
+            return P(client_axis, *([None] * (pad - 1)), *base)
+        return P(*([None] * pad), *base)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def enforce_divisibility(specs, shapes, axis_sizes: Mapping[str, int]):
+    """Replace any sharded dim whose mesh-axis product does not divide
+    the dim size with ``None`` (replicated) — per dim, not per leaf."""
+
+    def fix(spec, shp):
+        dims = tuple(shp.shape)
+        entries = tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))
+        out = []
+        for dim, entry in zip(dims, entries):
+            axes = entry if isinstance(entry, tuple) else (
+                (entry,) if entry is not None else ())
+            size = 1
+            for a in axes:
+                size *= int(axis_sizes.get(a, 1))
+            out.append(entry if size <= 1 or dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(cache, dp=None, tp: Optional[str] = None,
+                shard_batch: bool = True):
+    """Decode-cache PartitionSpecs.
+
+    Cache leaves are stacked per segment (leading repeat dim), then
+    batch: KV caches shard batch over ``dp`` and heads over ``tp``
+    (cache length instead under :data:`CACHE_LEN_TP`); SSM states shard
+    their head dim over ``tp``; scalars (``pos``) are replicated.
+    """
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        b = dp if shard_batch else None
+        if name in ("k", "v", "mem_k", "mem_v") and nd == 5:
+            if CACHE_LEN_TP:
+                return P(None, b, tp, None, None)   # (R, B, L, Hkv, hd)
+            return P(None, b, None, tp, None)
+        if name in ("c_kv", "k_rope") and nd == 4:   # (R, B, L, r)
+            return P(None, b, tp if CACHE_LEN_TP else None, None)
+        if name == "state" and nd == 5:              # (R, B, nh, hd, N)
+            return P(None, b, tp, None, None)
+        if name == "conv" and nd == 4:               # (R, B, w, ch)
+            return P(None, b, None, tp)
+        if nd >= 2:
+            return P(None, b, *([None] * (nd - 2)))
+        return P(None)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_spec(kind: str, dp_axes: Sequence[str],
+               tp: Optional[str] = None) -> Dict[str, P]:
+    """Input-batch PartitionSpecs for one step kind: batch over the data
+    axes, everything else replicated (``tp`` reserved for future
+    sequence-sharded inputs)."""
+    dp = tuple(dp_axes)
+    dp_spec: Any = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if kind in ("train", "prefill"):
+        return {
+            "tokens": P(dp_spec, None),
+            "labels": P(dp_spec, None),
+            "enc_embeds": P(dp_spec, None, None),
+        }
+    if kind in ("serve", "decode"):
+        return {"token": P(dp_spec, None)}
+    raise ValueError(f"unknown step kind {kind!r}")

@@ -1,0 +1,207 @@
+"""FedLay mixing compiled onto the device mesh (the paper's NDMP tables
+as static collectives).
+
+The control plane (``repro.core.ndmp``) converges neighbor tables
+host-side; ``repro.core.mixing.build_permute_schedule`` freezes them
+into a :class:`~repro.core.mixing.PermuteSchedule` (2L ring rotations +
+MEP confidence weights).  This module turns that schedule into device
+programs two ways:
+
+* :func:`fedlay_mix` / :func:`make_mixer` — the explicit ``shard_map``
+  path: one ``jax.lax.ppermute`` per (space × direction) slot, each
+  device holding one client's replica on the client axis.  Verified
+  equal to the dense ``schedule_mixing_matrix`` product in
+  ``tests/test_dist.py``.
+* :func:`global_mixer` — the global-view (auto-sharded jit) path used by
+  ``repro.launch.steps.dfl_train_bundle``: permutation gathers along the
+  leading client axis, which GSPMD lowers to collective-permutes when
+  that axis is client-sharded.
+
+Plus :func:`sync_bytes_per_client`, the paper's per-round communication
+accounting (§IV-D / Fig. 20) shared by the scalability benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mixing import PermuteSchedule
+
+#: Sync strategies understood by both mixer factories.
+SYNC_STRATEGIES = ("fedlay", "allreduce", "ring", "none")
+
+
+def ring_schedule(num_clients: int) -> PermuteSchedule:
+    """The identity-ring overlay as a PermuteSchedule: one space, simple
+    average over {self, predecessor, successor} (degenerates correctly
+    at n ≤ 2, where the two directions collide)."""
+    n = num_clients
+    pred = tuple((i - 1) % n for i in range(n))
+    succ = tuple((i + 1) % n for i in range(n))
+    weights = np.zeros((n, 2), dtype=np.float64)
+    self_w = np.ones((n,), dtype=np.float64)
+    for i in range(n):
+        seen = {i}
+        for k, src in enumerate((pred[i], succ[i])):
+            if src not in seen:
+                weights[i, k] = 1.0
+                seen.add(src)
+    total = self_w + weights.sum(axis=1)
+    weights /= total[:, None]
+    self_w /= total
+    return PermuteSchedule(num_clients=n, num_spaces=1, perms=(pred, succ),
+                           weights=weights.astype(np.float32),
+                           self_weight=self_w.astype(np.float32))
+
+
+def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
+               self_weight: jnp.ndarray, axis_name: str):
+    """One FedLay mixing round inside ``shard_map``.
+
+    ``tree`` leaves carry a leading local-client dim (size 1 when the
+    client axis maps 1:1 onto ``axis_name`` devices, which is the only
+    supported layout); ``weights`` is the local (1, 2L) confidence-weight
+    slice and ``self_weight`` the local (1,) self weight.  Equivalent to
+    the dense ``W @ X`` of ``schedule_mixing_matrix(sched)``.
+    """
+
+    def mix_leaf(leaf):
+        c = leaf.shape[0]
+        shape = (c,) + (1,) * (leaf.ndim - 1)
+        acc = leaf * self_weight.reshape(shape).astype(leaf.dtype)
+        for k in range(sched.num_slots):
+            recv = jax.lax.ppermute(leaf, axis_name,
+                                    perm=sched.ppermute_pairs(k))
+            w = weights[:, k].reshape(shape).astype(leaf.dtype)
+            acc = acc + recv * w
+        return acc
+
+    return jax.tree.map(mix_leaf, tree)
+
+
+def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
+               axis_name: str, num_clients: int) -> Callable:
+    """Build a ``shard_map``-body mixer ``(tree, weights, self_w) -> tree``
+    for one sync strategy over the client axis ``axis_name``.
+
+    * ``fedlay``   — 2L static ppermutes from ``sched`` (paper §III);
+    * ``allreduce``— uniform mean over all clients (centralized image);
+    * ``ring``     — identity-ring neighbor average (ignores ``sched``'s
+      weights; uses its own uniform ring schedule);
+    * ``none``     — isolated local training.
+    """
+    if strategy == "none":
+        return lambda tree, weights, self_w: tree
+
+    if strategy == "allreduce":
+        def allreduce_mixer(tree, weights, self_w):
+            def mean_leaf(leaf):
+                m = jnp.mean(leaf.astype(jnp.float32), axis=0, keepdims=True)
+                m = jax.lax.pmean(m, axis_name)
+                return jnp.broadcast_to(m.astype(leaf.dtype), leaf.shape)
+            return jax.tree.map(mean_leaf, tree)
+        return allreduce_mixer
+
+    if strategy == "ring":
+        ring = ring_schedule(num_clients)
+        ring_w = jnp.asarray(ring.weights)
+        ring_s = jnp.asarray(ring.self_weight)
+
+        def ring_mixer(tree, weights, self_w):
+            i = jax.lax.axis_index(axis_name)
+            return fedlay_mix(tree, ring, ring_w[i][None], ring_s[i][None],
+                              axis_name)
+        return ring_mixer
+
+    if strategy == "fedlay":
+        if sched is None:
+            raise ValueError("fedlay mixer needs a PermuteSchedule")
+        if sched.num_clients != num_clients:
+            raise ValueError(
+                f"schedule is for {sched.num_clients} clients, "
+                f"mesh axis {axis_name!r} has {num_clients}")
+        return lambda tree, weights, self_w: fedlay_mix(
+            tree, sched, weights, self_w, axis_name)
+
+    raise ValueError(
+        f"unknown sync strategy {strategy!r}; choose from {SYNC_STRATEGIES}")
+
+
+def global_mixer(strategy: str,
+                 sched: Optional[PermuteSchedule] = None) -> Callable:
+    """Build a global-view mixer ``params -> params`` over the leading
+    client axis (for auto-sharded jit, e.g. ``dfl_train_bundle``).
+
+    For ``fedlay``/``ring`` each of the 2L slots is a permutation gather
+    ``params[perm_k]`` along the client dim — GSPMD lowers it to a
+    collective-permute when that dim is client-sharded, i.e. exactly the
+    neighbor exchange :func:`fedlay_mix` spells out by hand.
+    """
+    if strategy == "none":
+        return lambda params: params
+
+    if strategy == "allreduce":
+        def allreduce(params):
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(
+                    jnp.mean(l.astype(jnp.float32), axis=0,
+                             keepdims=True).astype(l.dtype), l.shape),
+                params)
+        return allreduce
+
+    if strategy in ("fedlay", "ring"):
+        if sched is None:
+            raise ValueError(f"{strategy} mixer needs a PermuteSchedule")
+        C = sched.num_clients
+        perms = jnp.asarray(np.array(sched.perms), jnp.int32)   # (2L, C)
+        weights = jnp.asarray(sched.weights)                    # (C, 2L)
+        self_w = jnp.asarray(sched.self_weight)                 # (C,)
+
+        def mix(params):
+            def mix_leaf(leaf):
+                shape = (C,) + (1,) * (leaf.ndim - 1)
+                acc = leaf * self_w.reshape(shape).astype(leaf.dtype)
+                for k in range(sched.num_slots):
+                    recv = jnp.take(leaf, perms[k], axis=0)  # permutation
+                    w = weights[:, k].reshape(shape)
+                    acc = acc + recv * w.astype(leaf.dtype)
+                return acc
+            return jax.tree.map(mix_leaf, params)
+        return mix
+
+    raise ValueError(
+        f"unknown sync strategy {strategy!r}; choose from {SYNC_STRATEGIES}")
+
+
+def sync_bytes_per_client(strategy: str, model_bytes: int, num_clients: int,
+                          num_spaces: Optional[int] = None) -> float:
+    """Bytes each client sends per mixing round (paper §IV-D accounting).
+
+    * ``fedlay``: degree ≤ 2L ⇒ at most ``2L · model_bytes`` — constant
+      in n, the paper's headline scalability claim;
+    * ``ring``: two neighbors;
+    * ``complete``: all n−1 peers (the dense-DFL strawman);
+    * ``allreduce``: bandwidth-optimal ring all-reduce,
+      ``2·(n−1)/n · model_bytes``;
+    * ``none``: no communication.
+    """
+    n = num_clients
+    if strategy == "fedlay":
+        if num_spaces is None:
+            raise ValueError("fedlay accounting needs num_spaces")
+        return 2.0 * num_spaces * model_bytes
+    if strategy == "ring":
+        return 2.0 * model_bytes
+    if strategy == "complete":
+        return float(n - 1) * model_bytes
+    if strategy in ("allreduce", "fedavg"):
+        return 2.0 * (n - 1) / n * model_bytes
+    if strategy == "none":
+        return 0.0
+    raise ValueError(
+        f"unknown sync strategy {strategy!r}; choose from "
+        f"{SYNC_STRATEGIES + ('complete', 'fedavg')}")

@@ -258,7 +258,8 @@ def main() -> int:
                     help="perf toggles: comma-set of "
                          "bf16c,seqp,moepe,servetp,cachelp")
     ap.add_argument("--sync", default="standard",
-                    choices=["standard", "fedlay", "allreduce"],
+                    choices=["standard", "fedlay", "allreduce", "ring",
+                             "none"],
                     help="DFL mode: one FedLay client per data position")
     args = ap.parse_args()
 

@@ -13,15 +13,13 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from ..dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
@@ -29,8 +27,7 @@ def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, n // data)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -11,14 +11,13 @@ import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import numpy as np
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.mixing import PermuteSchedule
 from ..dist.sharding import (batch_spec, cache_specs, enforce_divisibility,
                              param_specs)
-from ..dist.sync import make_mixer
+from ..dist.sync import SYNC_STRATEGIES, global_mixer, ring_schedule
 from ..models import decode_step, init_cache, init_params, train_loss
 from ..models.config import ArchConfig, InputShape
 from ..optim.optimizers import (AdamWState, Optimizer, apply_updates,
@@ -202,11 +201,11 @@ def serve_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
 # Every position of the client axis (= data axis) holds one FedLay
 # client's full replica (leading num_clients dim; TP over model inside
 # the replica; no FSDP — clients own their weights).  After the local
-# step, models mix over the overlay: for each of the 2L (space ×
-# direction) slots, ``params[perm_k]`` is a permutation gather along the
-# client-sharded axis — GSPMD lowers it to a collective-permute, i.e.
-# exactly the paper's neighbor-to-neighbor exchange.  ``allreduce``
-# baseline replaces the mixing with a uniform mean over clients.
+# step, models mix over the overlay via ``repro.dist.sync.global_mixer``
+# (permutation gathers along the client-sharded axis — GSPMD lowers them
+# to collective-permutes, i.e. exactly the paper's neighbor-to-neighbor
+# exchange).  ``sync`` selects the strategy: "fedlay", "ring",
+# "allreduce" (uniform mean = centralized baseline), or "none".
 # --------------------------------------------------------------------------
 
 def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
@@ -215,6 +214,9 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      remat: bool = True) -> StepBundle:
     from ..core.mixing import build_permute_schedule
     from ..data.tokens import input_specs as data_specs
+    if sync not in SYNC_STRATEGIES:
+        raise ValueError(
+            f"unknown sync strategy {sync!r}; choose from {SYNC_STRATEGIES}")
     dp = tuple(a for a in mesh.axis_names if a != "model")
     client_axis = dp if len(dp) > 1 else dp[0]
     C = 1
@@ -223,9 +225,16 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     # multi-pod: bias 2 of the L ring spaces pod-local (the §Perf Pareto
     # point) so most mixing volume stays on intra-pod links
     pods = mesh.shape.get("pod")
-    sched = build_permute_schedule(
-        C, num_spaces, pod_bias=pods if pods and pods > 1 else None,
-        pod_bias_spaces=max(1, num_spaces - 1) if pods and pods > 1 else None)
+    if sync == "fedlay":
+        sched: Optional[PermuteSchedule] = build_permute_schedule(
+            C, num_spaces, pod_bias=pods if pods and pods > 1 else None,
+            pod_bias_spaces=max(1, num_spaces - 1) if pods and pods > 1
+            else None)
+    elif sync == "ring":
+        sched = ring_schedule(C)
+    else:
+        sched = None
+    mix = global_mixer(sync, sched)
 
     params_shape = jax.eval_shape(
         lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
@@ -247,10 +256,6 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     b_specs = {k: P(client_axis, *([None] * (len(v.shape) - 1)))
                for k, v in b_shapes.items()}
 
-    perms = jnp.asarray(np.array([sched.perms[k] for k in
-                                  range(sched.num_slots)]), jnp.int32)
-    weights = jnp.asarray(sched.weights)          # (C, 2L)
-    self_w = jnp.asarray(sched.self_weight)       # (C,)
     act = P(None, None, None)
 
     def per_client_loss(p, b):
@@ -263,22 +268,7 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         updates, opt_state = jax.vmap(optimizer.update)(grads, opt_state,
                                                         params)
         params = jax.vmap(apply_updates)(params, updates)
-        if sync == "fedlay":
-            def mix_leaf(leaf):
-                acc = leaf * self_w.reshape((C,) + (1,) * (leaf.ndim - 1)
-                                            ).astype(leaf.dtype)
-                for k in range(sched.num_slots):
-                    recv = jnp.take(leaf, perms[k], axis=0)  # permutation
-                    w = weights[:, k].reshape((C,) + (1,) * (leaf.ndim - 1))
-                    acc = acc + recv * w.astype(leaf.dtype)
-                return acc
-            params = jax.tree.map(mix_leaf, params)
-        elif sync == "allreduce":
-            params = jax.tree.map(
-                lambda l: jnp.broadcast_to(
-                    jnp.mean(l.astype(jnp.float32), axis=0,
-                             keepdims=True).astype(l.dtype), l.shape),
-                params)
+        params = mix(params)
         return params, opt_state, {"loss": jnp.mean(loss)}
 
     return StepBundle(

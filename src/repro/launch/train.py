@@ -27,10 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from ..core.mixing import build_permute_schedule
 from ..data.tokens import TokenStream
+from ..dist.compat import make_client_mesh, shard_map
 from ..dist.sync import make_mixer
 from ..models.config import ArchConfig
 from ..models.model import init_params, train_loss
@@ -77,8 +77,7 @@ def make_dfl_step(cfg: ArchConfig, optimizer, mixer, mesh: Mesh,
 
 
 def run(args) -> Dict:
-    mesh = jax.make_mesh((args.clients,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_client_mesh(args.clients, "data")
     n = args.clients
     cfg = tiny_lm(vocab=args.vocab, d_model=args.d_model, layers=args.layers)
 

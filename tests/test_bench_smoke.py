@@ -1,0 +1,20 @@
+"""Benchmark-harness smoke: the quick-mode front door must exit 0 so
+benchmark-breaking API changes fail tier-1 instead of silently rotting
+(fig3 exercises the topology-metrics path end to end in seconds)."""
+
+import os
+import subprocess
+import sys
+
+
+def test_benchmarks_quick_fig3():
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    src = os.path.join(repo, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fig3"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "fig3" in res.stdout

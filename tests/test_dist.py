@@ -83,12 +83,12 @@ _SUBPROC = textwrap.dedent("""
     import json, sys
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
     from repro.core.mixing import build_permute_schedule, schedule_mixing_matrix
+    from repro.dist.compat import make_client_mesh, shard_map
     from repro.dist.sync import make_mixer
 
     n, dim = 8, 40
-    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_client_mesh(n, "data")
     sched = build_permute_schedule(n, 3)
     mixer = make_mixer("fedlay", sched, "data", n)
     rng = np.random.default_rng(0)
