@@ -1,0 +1,95 @@
+"""Beyond-paper microbenchmark: churn-triggered mixer hot-swap cost.
+
+Measures what the live control plane (:mod:`repro.overlay`) adds to a
+training step: host-side schedule rebuild latency, first-touch XLA
+compile latency of a swapped-in mixer, steady-state (cached) mixer call
+latency, and the compile-cache hit rate over a fail→rejoin cycle — the
+rejoin restores the previous alive set, whose schedule hashes equal, so
+the swap back is a pure cache hit with zero retrace.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ndmp import Simulator
+from repro.overlay import ChurnTrace, OverlayController
+
+from .common import emit
+
+
+def _converge(ctl: OverlayController, trace=None, steps=30):
+    """Step until the overlay is correct; returns the report of the last
+    step that actually swapped the mixer (or the final step if none)."""
+    last = swap = None
+    for _ in range(steps):
+        last = ctl.step(1.0, trace=trace)
+        trace = None
+        if last.swapped:
+            swap = last
+        if ctl.sim.correctness() == 1.0:
+            break
+    return swap or last
+
+
+def _timed_mix(ctl: OverlayController, X) -> float:
+    t0 = time.perf_counter()
+    out = ctl.mixer(X)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) * 1e3
+
+
+def run(quick: bool = False) -> None:
+    n = 16 if quick else 64
+    dim = 1024 if quick else 65536
+    sim = Simulator(num_spaces=3, latency=0.05, heartbeat_period=0.5,
+                    probe_period=1.0, seed=0)
+    sim.seed_network(list(range(n)))
+    ctl = OverlayController(sim)
+    rng = np.random.default_rng(0)
+
+    def stacked(m):
+        return jnp.asarray(rng.normal(size=(m, dim)).astype(np.float32))
+
+    # steady state: first call compiles, second runs the cached program
+    r0 = _converge(ctl)
+    cold = _timed_mix(ctl, stacked(len(ctl.alive)))
+    warm = _timed_mix(ctl, stacked(len(ctl.alive)))
+    emit("churn_swap", phase="steady", n=len(ctl.alive),
+         rebuild_ms=round(r0.rebuild_ms, 3), compile_ms=round(cold, 1),
+         exec_ms=round(warm, 2), cache_hit=int(r0.cache_hit))
+
+    # fail one node: schedule changes -> rebuild + fresh compile
+    victim = ctl.alive[n // 2]
+    trace = ChurnTrace.scripted([(ctl.sim.now + 0.1, "fail", victim)])
+    r1 = _converge(ctl, trace=trace)
+    cold = _timed_mix(ctl, stacked(len(ctl.alive)))
+    warm = _timed_mix(ctl, stacked(len(ctl.alive)))
+    emit("churn_swap", phase="fail", n=len(ctl.alive),
+         rebuild_ms=round(r1.rebuild_ms, 3), compile_ms=round(cold, 1),
+         exec_ms=round(warm, 2), cache_hit=int(r1.cache_hit))
+
+    # rejoin the same node: the alive set (and thus the schedule digest)
+    # reverts -> the old compiled mixer comes straight from the cache
+    trace = ChurnTrace.scripted([(ctl.sim.now + 0.1, "join", victim,
+                                  int(ctl.alive[0]))])
+    r2 = _converge(ctl, trace=trace)
+    hot = _timed_mix(ctl, stacked(len(ctl.alive)))
+    emit("churn_swap", phase="rejoin", n=len(ctl.alive),
+         rebuild_ms=round(r2.rebuild_ms, 3), compile_ms=0.0,
+         exec_ms=round(hot, 2), cache_hit=int(r2.cache_hit))
+
+    # quiescent control steps are pure cache hits
+    for _ in range(5):
+        ctl.step(1.0)
+    emit("churn_swap_totals", rebuilds=ctl.rebuilds, swaps=ctl.swaps,
+         cache_size=len(ctl.cache), cache_hits=ctl.cache.hits,
+         cache_misses=ctl.cache.misses,
+         hit_rate=round(ctl.cache.hit_rate, 3))
+
+
+if __name__ == "__main__":
+    run()

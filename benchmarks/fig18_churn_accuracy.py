@@ -1,13 +1,23 @@
 """Paper Figs. 18/19: model accuracy under extreme churn — 50 new
 clients join a 50-client FedLay mid-training; the new nodes' accuracy
-catches up via high-confidence models from existing nodes."""
+catches up via high-confidence models from existing nodes.
+
+Both phases run through the live control plane: the overlay before and
+after the mass join is whatever :class:`repro.overlay.OverlayController`
+converged to (no hand-rolled topology splice), and each joiner is
+warm-started from its highest-confidence surviving neighbor under the
+post-churn schedule (:func:`repro.overlay.joiner_donors` — the paper's
+catch-up mechanism) instead of from scratch.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.baselines import TOPOLOGY_REGISTRY
-from repro.core.dfl import Engine, MethodSpec, capacity_periods
+from repro.core.dfl import Engine, MethodSpec, capacity_periods, make_profiles
+from repro.core.ndmp import Simulator
+from repro.core.topology import Topology
+from repro.overlay import ChurnTrace, OverlayController, joiner_donors
 
 from .common import emit, mnist_task
 
@@ -19,25 +29,51 @@ def run(quick: bool = False) -> None:
     total = 30.0 if quick else 60.0
     task = mnist_task(n_clients=n_total, shards=3)
     periods = capacity_periods(n_total, 1.0, seed=0)
+    profiles = make_profiles(task, periods)
 
-    # phase 1: only the first half trains — the not-yet-joined clients
+    sim = Simulator(num_spaces=3, latency=0.05, heartbeat_period=0.5,
+                    probe_period=1.0, seed=0)
+    sim.seed_network(list(range(n_old)))
+    ctl = OverlayController(
+        sim, profiles_fn=lambda alive: {u: profiles[u] for u in alive})
+
+    # phase 1: only the joined half trains — the not-yet-joined clients
     # are edgeless and dormant (period beyond the horizon)
-    from repro.core.topology import Topology
     engine = Engine()
-    topo_old = TOPOLOGY_REGISTRY["fedlay"](n_old, 3)
-    topo_p1 = Topology(nodes=tuple(range(n_total)), edges=topo_old.edges)
+    topo_p1 = Topology(nodes=tuple(range(n_total)),
+                       edges=ctl.topology().edges)
     periods_p1 = np.concatenate([periods[:n_old],
                                  np.full(n_old, 10 * t_join)])
     res1 = engine.run(task, MethodSpec(name="phase1", topology=topo_p1),
                       total_time=t_join, model_bytes=4096, seed=0,
                       periods=periods_p1)
-    # phase 2: full network; new nodes start from init, old keep params
-    topo_new = TOPOLOGY_REGISTRY["fedlay"](n_total, 3)
+
+    # mass join through NDMP; the controller swaps in the new schedule
+    trace = ChurnTrace.scripted(
+        [(ctl.sim.now + 0.1, "join", j, int(j % n_old))
+         for j in range(n_old, n_total)])
+    for _ in range(40):
+        r = ctl.step(1.0, trace=trace)
+        if len(r.alive) == n_total and ctl.sim.correctness() == 1.0:
+            break
+    emit("fig18_swap", n_old=n_old, n_total=n_total, epoch=ctl.epoch,
+         swaps=ctl.swaps, correctness=round(ctl.sim.correctness(), 4))
+
+    # phase 2: full network under the controller's post-churn overlay;
+    # joiners warm-start from their highest-confidence old neighbor
+    survivors = tuple(range(n_old))
+    joiners = tuple(range(n_old, n_total))
+    donors = joiner_donors(ctl.schedule, ctl.alive, joiners, survivors)
+    init = list(res1.final_params[:n_old])
+    for j in joiners:
+        donor = donors.get(j)
+        init.append(res1.final_params[donor].copy() if donor is not None
+                    else task.init_params(0))
+    topo_new = Topology(nodes=tuple(range(n_total)),
+                        edges=ctl.topology().edges)
     res2 = engine.run(task, MethodSpec(name="phase2", topology=topo_new),
                       total_time=total - t_join, model_bytes=4096, seed=1,
-                      periods=periods,
-                      init_params=res1.final_params[:n_old]
-                      + [task.init_params(0)] * n_old)
+                      periods=periods, init_params=init)
     for row in res2.trace:
         accs = row.accs
         if accs is None:

@@ -1,48 +1,69 @@
 """Paper Fig. 8: (a) mass join correctness-vs-time, (b) mass failure
-recovery, (c) construction messages per client vs network size."""
+recovery, (c) construction messages per client vs network size.
+
+(a)/(b) run through the live control plane
+(:class:`repro.overlay.OverlayController`): each 1 s control step
+advances NDMP, extracts the neighbor-table delta, and hot-swaps the
+compiled mixer — so the rows also report what the data plane did
+(schedule swaps, compile-cache hits) while the overlay converged.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.ndmp import Simulator
+from repro.overlay import ChurnTrace, OverlayController
 
 from .common import emit
 
 
-def _sim(n, L=3, seed=0):
+def _controller(n, L=3, seed=0):
     sim = Simulator(num_spaces=L, latency=0.35, heartbeat_period=1.0,
                     probe_period=2.0, seed=seed)
     sim.seed_network(list(range(n)))
-    return sim
+    return OverlayController(sim, measure_correctness=True)
 
 
 def mass_join(n0: int = 400, joins: int = 100, degree: int = 6) -> None:
-    sim = _sim(n0, L=degree // 2)
-    for j in range(10_000, 10_000 + joins):
-        sim.join(j, bootstrap=int(j % n0))
-    t = 0.0
+    ctl = _controller(n0, L=degree // 2)
+    trace = ChurnTrace.scripted(
+        [(0.0, "join", j, int(j % n0))
+         for j in range(10_000, 10_000 + joins)])
+    # dt=0 priming step: inject the mass join and sample the t=0 dip
+    r = ctl.step(0.0, trace=trace)
+    emit("fig8a", n0=n0, joins=joins, degree=degree, t=0.0,
+         correctness=round(r.correctness, 4), epoch=r.epoch,
+         swapped=int(r.swapped), cache_hit=int(r.cache_hit))
     for step in range(20):
-        sim.run_until(t)
-        emit("fig8a", n0=n0, joins=joins, degree=degree, t=round(t, 2),
-             correctness=round(sim.correctness(), 4))
-        if sim.correctness() == 1.0 and step > 2:
+        r = ctl.step(1.0)
+        emit("fig8a", n0=n0, joins=joins, degree=degree, t=round(r.time, 2),
+             correctness=round(r.correctness, 4), epoch=r.epoch,
+             swapped=int(r.swapped), cache_hit=int(r.cache_hit))
+        if r.correctness == 1.0 and step > 2:
             break
-        t += 1.0
+    emit("fig8a_swap", n0=n0, joins=joins, rebuilds=ctl.rebuilds,
+         swaps=ctl.swaps, cache_hit_rate=round(ctl.cache.hit_rate, 3))
 
 
 def mass_failure(n0: int = 400, failures: int = 100, degree: int = 6) -> None:
-    sim = _sim(n0, L=degree // 2)
-    for f in range(failures):
-        sim.fail(f)
-    t = 0.0
+    ctl = _controller(n0, L=degree // 2)
+    trace = ChurnTrace.scripted(
+        [(0.0, "fail", f) for f in range(failures)])
+    r = ctl.step(0.0, trace=trace)
+    emit("fig8b", n0=n0, failures=failures, degree=degree, t=0.0,
+         correctness=round(r.correctness, 4), epoch=r.epoch,
+         swapped=int(r.swapped), cache_hit=int(r.cache_hit))
     for step in range(40):
-        sim.run_until(t)
-        emit("fig8b", n0=n0, failures=failures, degree=degree, t=round(t, 2),
-             correctness=round(sim.correctness(), 4))
-        if sim.correctness() == 1.0 and step > 2:
+        r = ctl.step(1.0)
+        emit("fig8b", n0=n0, failures=failures, degree=degree,
+             t=round(r.time, 2), correctness=round(r.correctness, 4),
+             epoch=r.epoch, swapped=int(r.swapped),
+             cache_hit=int(r.cache_hit))
+        if r.correctness == 1.0 and step > 2:
             break
-        t += 1.0
+    emit("fig8b_swap", n0=n0, failures=failures, rebuilds=ctl.rebuilds,
+         swaps=ctl.swaps, cache_hit_rate=round(ctl.cache.hit_rate, 3))
 
 
 def construction_cost(sizes=(100, 200, 500)) -> None:

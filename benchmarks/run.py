@@ -14,7 +14,7 @@ import sys
 import time
 import traceback
 
-from . import (crosspod, fig3_topology, fig8_churn, fig11_noniid,
+from . import (churn_swap, crosspod, fig3_topology, fig8_churn, fig11_noniid,
                fig12_async, fig13_locality, fig15_compute_cost,
                fig16_confidence, fig18_churn_accuracy, fig20_scalability,
                roofline, sync_collectives, table3_accuracy)
@@ -33,6 +33,7 @@ MODULES = {
     "roofline": roofline,
     "sync_collectives": sync_collectives,
     "crosspod": crosspod,
+    "churn_swap": churn_swap,
 }
 
 

@@ -19,6 +19,7 @@ Two consumers:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -63,7 +64,7 @@ def gossip_step(stacked_models: np.ndarray, W: np.ndarray) -> np.ndarray:
 # Static ppermute schedule (TPU path)
 # --------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class PermuteSchedule:
     """Everything :func:`repro.dist.sync.fedlay_mix` (shard_map path) and
     :func:`repro.dist.sync.global_mixer` (auto-sharded path) need, all
@@ -76,6 +77,10 @@ class PermuteSchedule:
     model at device ``i`` — already zeroed for duplicate adjacencies and
     self-loops — and ``self_weight[i]`` is c_i.  Rows are normalized so
     ``self_weight[i] + Σ_k weights[i,k] == 1``.
+
+    Schedules are value-hashable (perms + weights digest), so they can
+    key the overlay controller's mixer compile cache and dict/set-based
+    test assertions directly.
     """
 
     num_clients: int
@@ -91,6 +96,30 @@ class PermuteSchedule:
     @property
     def num_slots(self) -> int:
         return 2 * self.num_spaces
+
+    def digest(self) -> str:
+        """Stable content hash over shape, perms, and (f32-exact) weights."""
+        cached = self.__dict__.get("_digest")
+        if cached is None:
+            h = hashlib.sha256()
+            h.update(np.asarray([self.num_clients, self.num_spaces],
+                                np.int64).tobytes())
+            h.update(np.asarray(self.perms, np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.weights,
+                                          np.float32).tobytes())
+            h.update(np.ascontiguousarray(self.self_weight,
+                                          np.float32).tobytes())
+            cached = h.hexdigest()
+            object.__setattr__(self, "_digest", cached)
+        return cached
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, PermuteSchedule):
+            return NotImplemented
+        return self.digest() == other.digest()
+
+    def __hash__(self) -> int:
+        return hash(self.digest())
 
 
 def build_permute_schedule(num_clients: int, num_spaces: int,
@@ -131,13 +160,39 @@ def build_permute_schedule(num_clients: int, num_spaces: int,
             coord(i, s) for s in range(num_spaces))) for i in range(n)]
     else:
         addrs = [NodeAddress.create(i, num_spaces, salt) for i in range(n)]
+    return schedule_from_addresses(addrs, profiles=profiles, alpha_d=alpha_d,
+                                   alpha_c=alpha_c,
+                                   confidence_weighted=confidence_weighted)
+
+
+def schedule_from_addresses(addrs: Sequence[NodeAddress],
+                            profiles: Optional[Dict[int, ClientProfile]] = None,
+                            alpha_d: float = 0.5, alpha_c: float = 0.5,
+                            confidence_weighted: bool = True) -> PermuteSchedule:
+    """Compile the FedLay overlay over an explicit node set into a
+    :class:`PermuteSchedule` — device slot ``i`` hosts ``addrs[i]``.
+
+    This is the live-churn entry point used by
+    :class:`repro.overlay.controller.OverlayController`: node ids are
+    arbitrary (NDMP identities, not mesh indices), ``profiles`` is keyed
+    by node id, and the returned perms/weights are in *slot* space so
+    they drop straight into :func:`repro.dist.sync.make_mixer` /
+    :func:`repro.dist.sync.global_mixer` for the current alive set.
+    """
+    n = len(addrs)
+    if n == 0:
+        raise ValueError("cannot build a schedule over zero nodes")
+    num_spaces = addrs[0].num_spaces
+    slot_of = {a.node_id: i for i, a in enumerate(addrs)}
+    if len(slot_of) != n:
+        raise ValueError("duplicate node ids in address list")
     orders = ring_orders(addrs)  # per space: clockwise id order
 
-    # incoming source per device per slot
+    # incoming source slot per device slot per (space, direction)
     perms: List[Tuple[int, ...]] = []
     senders = np.zeros((n, 2 * num_spaces), dtype=np.int64)
     for s in range(num_spaces):
-        order = orders[s]
+        order = [slot_of[u] for u in orders[s]]
         pos = {u: k for k, u in enumerate(order)}
         succ = [0] * n
         pred = [0] * n
@@ -155,18 +210,19 @@ def build_permute_schedule(num_clients: int, num_spaces: int,
     nbr_map = topo.neighbor_map()
     if profiles is None:
         profiles = {
-            i: ClientProfile(client_id=i, period=1.0,
-                             label_histogram=np.ones(2))
-            for i in range(n)
+            a.node_id: ClientProfile(client_id=a.node_id, period=1.0,
+                                     label_histogram=np.ones(2))
+            for a in addrs
         }
     weights = np.zeros((n, 2 * num_spaces), dtype=np.float64)
     self_w = np.zeros((n,), dtype=np.float64)
-    for i in range(n):
-        others = nbr_map[i]
-        w = aggregation_weights(profiles[i], [profiles[v] for v in others],
+    for i, a in enumerate(addrs):
+        others = nbr_map[a.node_id]
+        w = aggregation_weights(profiles[a.node_id],
+                                [profiles[v] for v in others],
                                 alpha_d, alpha_c, confidence_weighted)
         self_w[i] = w[0]
-        per_peer = {v: w[k + 1] for k, v in enumerate(others)}
+        per_peer = {slot_of[v]: w[k + 1] for k, v in enumerate(others)}
         seen: set = set()
         for k in range(2 * num_spaces):
             src = int(senders[i, k])

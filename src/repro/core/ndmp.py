@@ -23,8 +23,11 @@ per-message latencies, per-node clocks, no global knowledge — and its
 converged neighbor tables are what the distribution layer compiles into
 static ``ppermute`` schedules
 (:func:`repro.core.mixing.build_permute_schedule` →
-:func:`repro.dist.sync.make_mixer`; churn-triggered recompilation of a
-live schedule is an open ROADMAP item).
+:func:`repro.dist.sync.make_mixer`).  Churn-triggered recompilation is
+closed by the :mod:`repro.overlay` control plane: it polls
+:meth:`Simulator.tables_version` / :meth:`Simulator.neighbor_tables`
+between training steps, diffs them into table deltas, and hot-swaps the
+compiled mixer for the new alive set.
 """
 
 from __future__ import annotations
@@ -139,6 +142,10 @@ class NodeState:
     last_seen: Dict[int, float] = dataclasses.field(default_factory=dict)
     sent_messages: int = 0
     join_messages: int = 0
+    # monotone count of actual pointer rewrites — the per-node half of
+    # the cheap change stamp ``Simulator.tables_version`` exposes to the
+    # overlay control plane
+    version: int = 0
 
     def init_spaces(self, num_spaces: int) -> None:
         self.succ = [None] * num_spaces
@@ -155,8 +162,12 @@ class NodeState:
     def set_pointer(self, space: int, side: str, peer: Optional[int],
                     peer_coords: Optional[tuple]) -> None:
         if side == "succ":
+            if self.succ[space] != peer:
+                self.version += 1
             self.succ[space] = peer
         else:
+            if self.pred[space] != peer:
+                self.version += 1
             self.pred[space] = peer
         if peer is not None and peer_coords is not None:
             self.addr_book[peer] = peer_coords
@@ -243,6 +254,10 @@ class Simulator:
         self.nodes: Dict[int, NodeState] = {}
         self.dropped_messages = 0
         self.delivered_messages = 0
+        # monotone count of membership operations (join/leave/fail) —
+        # folded into tables_version so a fail→rejoin of the same node
+        # inside one control window can never alias an unchanged stamp
+        self.churn_ops = 0
 
     # ---- event plumbing ---------------------------------------------------
     def latency(self) -> float:
@@ -332,6 +347,7 @@ class Simulator:
              seeds: Tuple[int, ...] = ()) -> None:
         """NDMP join: node_id enters through existing node ``bootstrap``
         (``seeds``: optional fallback contacts for bootstrap failure)."""
+        self.churn_ops += 1
         coords = coordinates(node_id, self.num_spaces, self.salt)
         st = NodeState(node_id=node_id, coords=coords, bootstrap=bootstrap,
                        seeds=tuple(seeds))
@@ -366,6 +382,7 @@ class Simulator:
 
     def leave(self, node_id: int) -> None:
         """NDMP leave: notify ring-adjacent pairs, then depart."""
+        self.churn_ops += 1
         st = self.nodes[node_id]
         for s in range(self.num_spaces):
             p, q = st.pred[s], st.succ[s]
@@ -380,6 +397,7 @@ class Simulator:
 
     def fail(self, node_id: int) -> None:
         """Abrupt failure: the node disappears without notice."""
+        self.churn_ops += 1
         self.nodes[node_id].alive = False
 
     # ---- message handlers -----------------------------------------------------
@@ -560,6 +578,25 @@ class Simulator:
 
     def neighbor_tables(self) -> Dict[int, frozenset]:
         return {n.node_id: n.neighbor_set for n in self.nodes.values() if n.alive}
+
+    # ---- delta API (consumed by repro.overlay) -------------------------------
+    def alive_ids(self) -> List[int]:
+        """Sorted ids of live nodes — the control plane's slot order."""
+        return sorted(n.node_id for n in self.nodes.values() if n.alive)
+
+    def tables_version(self) -> Tuple[frozenset, int, int]:
+        """Cheap O(n) change stamp over the live neighbor tables.
+
+        ``churn_ops`` advances on every join/leave/fail (so a fail→rejoin
+        of the same node can never alias, even though it resets that
+        node's per-pointer version), the frozenset tracks membership, and
+        within fixed membership every pointer rewrite strictly increases
+        the version sum — so two equal stamps imply unchanged tables,
+        letting :class:`repro.overlay.events.DeltaTracker` skip the full
+        diff on quiescent control steps."""
+        alive = [n for n in self.nodes.values() if n.alive]
+        return (frozenset(n.node_id for n in alive), self.churn_ops,
+                sum(n.version for n in alive))
 
     def avg_messages_per_node(self, join_only: bool = False) -> float:
         counts = [(n.join_messages if join_only else n.sent_messages)

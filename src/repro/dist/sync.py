@@ -2,10 +2,14 @@
 as static collectives).
 
 The control plane (``repro.core.ndmp``) converges neighbor tables
-host-side; ``repro.core.mixing.build_permute_schedule`` freezes them
+host-side; ``repro.core.mixing.build_permute_schedule`` (static mesh
+layout) or ``repro.core.mixing.schedule_from_addresses`` (the live NDMP
+alive set, via :class:`repro.overlay.OverlayController`) freezes them
 into a :class:`~repro.core.mixing.PermuteSchedule` (2L ring rotations +
-MEP confidence weights).  This module turns that schedule into device
-programs two ways:
+MEP confidence weights).  Schedules hash by content, so the overlay
+controller keys its mixer compile cache on them and hot-swaps the
+programs built here between training steps under churn.  This module
+turns a schedule into device programs two ways:
 
 * :func:`fedlay_mix` / :func:`make_mixer` — the explicit ``shard_map``
   path: one ``jax.lax.ppermute`` per (space × direction) slot, each

@@ -211,7 +211,15 @@ def serve_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
 def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      optimizer: Optimizer, dtype=jnp.bfloat16,
                      sync: str = "fedlay", num_spaces: int = 3,
-                     remat: bool = True) -> StepBundle:
+                     remat: bool = True,
+                     sched: Optional[PermuteSchedule] = None) -> StepBundle:
+    """``sched`` overrides the internally built overlay schedule, e.g.
+    to bake an :class:`repro.overlay.OverlayController`'s converged NDMP
+    schedule into a static bundle; when None the static overlay over
+    mesh data positions is built here.  (The live-churn loop,
+    :class:`repro.overlay.runtime.ChurnTrainLoop`, instead composes a
+    ``sync="none"`` bundle with the controller's hot-swapped mixer, so
+    the local step never recompiles on topology change.)"""
     from ..core.mixing import build_permute_schedule
     from ..data.tokens import input_specs as data_specs
     if sync not in SYNC_STRATEGIES:
@@ -225,15 +233,22 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     # multi-pod: bias 2 of the L ring spaces pod-local (the §Perf Pareto
     # point) so most mixing volume stays on intra-pod links
     pods = mesh.shape.get("pod")
-    if sync == "fedlay":
-        sched: Optional[PermuteSchedule] = build_permute_schedule(
+    if sched is not None:
+        if sync not in ("fedlay", "ring"):
+            raise ValueError(
+                f"an explicit schedule only applies to fedlay/ring sync, "
+                f"not {sync!r}")
+        if sched.num_clients != C:
+            raise ValueError(
+                f"schedule is for {sched.num_clients} clients, mesh data "
+                f"axes hold {C}")
+    elif sync == "fedlay":
+        sched = build_permute_schedule(
             C, num_spaces, pod_bias=pods if pods and pods > 1 else None,
             pod_bias_spaces=max(1, num_spaces - 1) if pods and pods > 1
             else None)
     elif sync == "ring":
         sched = ring_schedule(C)
-    else:
-        sched = None
     mix = global_mixer(sync, sched)
 
     params_shape = jax.eval_shape(

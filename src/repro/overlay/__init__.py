@@ -1,0 +1,29 @@
+"""``repro.overlay`` — the live churn control plane (paper §III-B).
+
+Closes the loop the seed left open: :mod:`repro.core.ndmp` converges
+neighbor tables host-side, :mod:`repro.dist.sync` compiles a frozen
+table into device collectives — this package runs *between* training
+steps to keep the two consistent while nodes join, leave, and fail:
+
+* :mod:`repro.overlay.events` — churn traces (scripted / Poisson) and
+  epoch-stamped neighbor-table deltas over the NDMP simulator;
+* :mod:`repro.overlay.controller` — :class:`OverlayController`: delta →
+  :func:`~repro.core.mixing.schedule_from_addresses` rebuild →
+  hot-swapped compiled mixer behind a schedule-keyed
+  :class:`MixerCache`;
+* :mod:`repro.overlay.runtime` — :class:`ChurnTrainLoop`: the bundle's
+  local step + the controller's mixer under a churn trace, with
+  node-identity shard remapping and Fig.-18 joiner catch-up init.
+"""
+
+from . import controller, events, runtime
+from .controller import ControlReport, MixerCache, OverlayController
+from .events import ChurnEvent, ChurnTrace, DeltaTracker, TableDelta
+from .runtime import ChurnStepRecord, ChurnTrainLoop, joiner_donors
+
+__all__ = [
+    "controller", "events", "runtime",
+    "ControlReport", "MixerCache", "OverlayController",
+    "ChurnEvent", "ChurnTrace", "DeltaTracker", "TableDelta",
+    "ChurnStepRecord", "ChurnTrainLoop", "joiner_donors",
+]

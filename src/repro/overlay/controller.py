@@ -1,0 +1,277 @@
+"""The live overlay controller: NDMP deltas → recompiled, hot-swapped mixers.
+
+This is the host-side loop that makes the reproduction *practical* DFL
+(paper §III-B deployment story): training proceeds on the compiled data
+plane while NDMP maintains the overlay under churn; between training
+steps the controller
+
+1. advances the discrete-event simulator (and applies any scheduled
+   churn events),
+2. polls the :class:`~repro.overlay.events.DeltaTracker` for
+   neighbor-table deltas,
+3. on a delta, rebuilds the :class:`~repro.core.mixing.PermuteSchedule`
+   for the current alive set
+   (:func:`repro.core.mixing.schedule_from_addresses` over the live
+   NDMP coordinates), and
+4. hot-swaps the compiled mixer behind a schedule-keyed compile cache —
+   an unchanged topology (or a revisited one) never retraces.
+
+Two mixer kinds, matching the two device paths in
+:mod:`repro.dist.sync`:
+
+* ``"global"`` (default) — ``jax.jit(global_mixer("fedlay", sched))``,
+  a ``params -> params`` program over the leading client axis (what
+  :func:`repro.launch.steps.dfl_train_bundle` composes with);
+* ``"shard_map"`` — the :func:`repro.dist.sync.make_mixer` shard_map
+  body for callers that embed mixing in an explicit shard_map program.
+  The cached callable has stable identity per schedule, so the caller's
+  enclosing ``jax.jit`` also avoids retracing on cache hits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from collections import OrderedDict
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from ..core.coords import NodeAddress
+from ..core.mep import ClientProfile
+from ..core.mixing import PermuteSchedule, schedule_from_addresses
+from ..core.ndmp import Simulator
+from ..core.topology import Topology, fedlay_topology
+from .events import ChurnEvent, ChurnTrace, DeltaTracker, TableDelta
+
+MIXER_KINDS = ("global", "shard_map")
+
+
+class MixerCache:
+    """Schedule-keyed LRU compile cache for mixers.
+
+    Keys are :class:`PermuteSchedule` values (hashable by perms+weights
+    digest), so two control epochs that converge to the same topology —
+    including the common no-op delta — share one compiled program.
+    ``maxsize`` bounds the pinned jit closures under sustained churn
+    (fresh joiner ids mint a new schedule per membership change); the
+    fail→rejoin zero-retrace win only needs the recent past.
+    """
+
+    def __init__(self, factory: Callable[[PermuteSchedule], Callable],
+                 maxsize: int = 64):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self._factory = factory
+        self._cache: "OrderedDict[PermuteSchedule, Callable]" = OrderedDict()
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, sched: PermuteSchedule) -> Tuple[Callable, bool]:
+        """(mixer, was_hit) for a schedule, compiling on first sight."""
+        mixer = self._cache.get(sched)
+        if mixer is not None:
+            self.hits += 1
+            self._cache.move_to_end(sched)
+            return mixer, True
+        self.misses += 1
+        mixer = self._factory(sched)
+        self._cache[sched] = mixer
+        while len(self._cache) > self.maxsize:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+        return mixer, False
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+
+def _global_mixer_factory(strategy: str = "fedlay"):
+    import jax
+    from ..dist.sync import global_mixer
+
+    def build(sched: PermuteSchedule) -> Callable:
+        return jax.jit(global_mixer(strategy, sched))
+    return build
+
+
+def _shard_map_mixer_factory(axis_name: str, strategy: str = "fedlay"):
+    from ..dist.sync import make_mixer
+
+    def build(sched: PermuteSchedule) -> Callable:
+        return make_mixer(strategy, sched, axis_name, sched.num_clients)
+    return build
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlReport:
+    """What one control step did."""
+
+    epoch: int                     # delta epoch after this step
+    time: float                    # simulator clock after this step
+    alive: Tuple[int, ...]         # slot order: sorted live node ids
+    delta: TableDelta
+    swapped: bool                  # a different mixer is now live
+    rebuilt: bool                  # a schedule was (re)compiled host-side
+    cache_hit: bool                # the mixer came out of the compile cache
+    rebuild_ms: float              # host time spent building the schedule
+    correctness: Optional[float] = None
+
+
+class OverlayController:
+    """Closes the loop between ``core.ndmp.Simulator`` (control plane)
+    and the compiled mixer (data plane).
+
+    ``step(dt)`` advances NDMP by ``dt`` of simulated time, detects
+    table deltas, and exposes the current compiled mixer via
+    :attr:`mixer` (hot-swapped only when the topology actually changed).
+    ``profiles_fn`` supplies MEP confidence profiles for an alive set;
+    default: uniform profiles (simple ablation-style weights).  Profiles
+    are assumed stable for a given alive set — schedules rebuild on
+    membership change, not on profile drift.
+    """
+
+    def __init__(self, sim: Simulator, *,
+                 mixer_kind: str = "global",
+                 strategy: str = "fedlay",
+                 axis_name: str = "data",
+                 alpha_d: float = 0.5, alpha_c: float = 0.5,
+                 confidence_weighted: bool = True,
+                 profiles_fn: Optional[
+                     Callable[[Tuple[int, ...]],
+                              Dict[int, ClientProfile]]] = None,
+                 mixer_factory: Optional[
+                     Callable[[PermuteSchedule], Callable]] = None,
+                 cache_size: int = 64,
+                 measure_correctness: bool = False):
+        if mixer_kind not in MIXER_KINDS:
+            raise ValueError(f"unknown mixer kind {mixer_kind!r}; "
+                             f"choose from {MIXER_KINDS}")
+        self.sim = sim
+        self.tracker = DeltaTracker(sim)
+        self.strategy = strategy
+        self.alpha_d, self.alpha_c = alpha_d, alpha_c
+        self.confidence_weighted = confidence_weighted
+        self.profiles_fn = profiles_fn
+        self.measure_correctness = measure_correctness
+        if mixer_factory is None:
+            mixer_factory = (_global_mixer_factory(strategy)
+                             if mixer_kind == "global"
+                             else _shard_map_mixer_factory(axis_name,
+                                                           strategy))
+        self.cache = MixerCache(mixer_factory, maxsize=cache_size)
+        self.rebuilds = 0
+        self.swaps = 0
+        self._alive: Tuple[int, ...] = ()
+        self._schedule: Optional[PermuteSchedule] = None
+        self._mixer: Optional[Callable] = None
+        # trace cursor: end of the last processed control window.  Starts
+        # at -inf so events scheduled at or before the first window's
+        # start (e.g. t=0 mass churn) are applied rather than silently
+        # falling outside the half-open (t0, t1] window.
+        self._applied_until = float("-inf")
+        # initial build for the seed network (not counted as churn-driven
+        # rebuild/swap activity; its compile-cache miss is kept)
+        self._refresh(force=True)
+        self.rebuilds = 0
+        self.swaps = 0
+
+    # ---- public state ----------------------------------------------------
+    @property
+    def alive(self) -> Tuple[int, ...]:
+        """Sorted live node ids — slot ``i`` of the schedule hosts
+        ``alive[i]``."""
+        return self._alive
+
+    @property
+    def schedule(self) -> PermuteSchedule:
+        assert self._schedule is not None
+        return self._schedule
+
+    @property
+    def mixer(self) -> Callable:
+        """The currently live compiled mixer."""
+        assert self._mixer is not None
+        return self._mixer
+
+    @property
+    def epoch(self) -> int:
+        return self.tracker.epoch
+
+    def topology(self) -> Topology:
+        """The ideal FedLay graph over the current alive set (for the
+        host-simulation engine and correctness accounting)."""
+        return fedlay_topology(self._alive_addresses())
+
+    # ---- the control step ------------------------------------------------
+    def step(self, dt: float,
+             events: Iterable[ChurnEvent] = (),
+             trace: Optional[ChurnTrace] = None) -> ControlReport:
+        """One control interval: apply churn scheduled up to ``now+dt``
+        and not yet processed (the first window reaches back to -inf, so
+        t=0 events fire), advance NDMP to ``now+dt``, then reconcile the
+        data plane with the observed tables.
+
+        The schedule is a pure function of the alive set (+ profiles),
+        so only *membership* deltas force a rebuild; pointer-only deltas
+        (NDMP repair in flight) advance the epoch without paying the
+        host-side rebuild for a byte-identical schedule."""
+        t_end = self.sim.now + dt
+        due = list(events)
+        if trace is not None:
+            due.extend(trace.between(self._applied_until, t_end))
+        self._applied_until = max(self._applied_until, t_end)
+        ChurnTrace.apply(self.sim, sorted(due, key=lambda e: e.time))
+        self.sim.run_until(t_end)
+        delta = self.tracker.poll()
+        swapped, rebuilt, cache_hit, rebuild_ms = self._refresh(
+            force=bool(delta.joined or delta.left))
+        return ControlReport(
+            epoch=self.tracker.epoch, time=self.sim.now,
+            alive=self._alive, delta=delta, swapped=swapped,
+            rebuilt=rebuilt, cache_hit=cache_hit, rebuild_ms=rebuild_ms,
+            correctness=(self.sim.correctness()
+                         if self.measure_correctness else None))
+
+    # ---- internals -------------------------------------------------------
+    def _alive_addresses(self) -> Tuple[NodeAddress, ...]:
+        return tuple(sorted(self.sim.alive_addresses(),
+                            key=lambda a: a.node_id))
+
+    def _refresh(self, force: bool) -> Tuple[bool, bool, bool, float]:
+        """Reconcile schedule+mixer with the live tables.
+
+        Returns (swapped, rebuilt, cache_hit, rebuild_ms).  Without
+        ``force`` (empty delta) the current mixer stays live and the
+        step counts as a cache hit with no rebuild.
+        """
+        if not force and self._schedule is not None:
+            # quiescent step: same schedule, genuine cache lookup, no
+            # host-side rebuild and no retrace
+            self._mixer, hit = self.cache.get(self._schedule)
+            return False, False, hit, 0.0
+        t0 = _time.perf_counter()
+        addrs = self._alive_addresses()
+        profiles = (self.profiles_fn(tuple(a.node_id for a in addrs))
+                    if self.profiles_fn is not None else None)
+        sched = schedule_from_addresses(
+            addrs, profiles=profiles, alpha_d=self.alpha_d,
+            alpha_c=self.alpha_c,
+            confidence_weighted=self.confidence_weighted)
+        rebuild_ms = (_time.perf_counter() - t0) * 1e3
+        self.rebuilds += 1
+        mixer, hit = self.cache.get(sched)
+        swapped = sched != self._schedule
+        if swapped:
+            self.swaps += 1
+        self._alive = tuple(a.node_id for a in addrs)
+        self._schedule = sched
+        self._mixer = mixer
+        return swapped, True, hit, rebuild_ms

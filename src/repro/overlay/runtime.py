@@ -1,0 +1,172 @@
+"""Training under live churn: the controller driving the device data plane.
+
+:class:`ChurnTrainLoop` runs :func:`repro.launch.steps.dfl_train_bundle`
+(with ``sync="none"`` — the pure per-client local step, vmapped over the
+leading client axis and therefore shape-polymorphic in the number of
+clients) and applies the :class:`~repro.overlay.controller
+.OverlayController`'s hot-swapped compiled mixer between steps.  The
+split is the paper's deployment story: the local step compiles once per
+alive-set size, the mixer recompiles only on topology change (and the
+schedule-keyed cache makes revisited topologies free).
+
+Membership changes remap state by *node identity*, not device slot:
+
+* survivors carry their parameter/optimizer rows (and their data shard —
+  batches are drawn from node-id-keyed streams) to their new slot;
+* joiners are initialized from their highest-confidence live neighbor's
+  model (:func:`joiner_donors`, the paper's Fig. 18 catch-up mechanism)
+  with fresh optimizer state;
+* leavers' rows are dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.mixing import PermuteSchedule
+from .controller import ControlReport, OverlayController
+from .events import ChurnTrace
+
+
+def joiner_donors(sched: PermuteSchedule, alive: Sequence[int],
+                  joiners: Sequence[int],
+                  survivors: Sequence[int]) -> Dict[int, Optional[int]]:
+    """For each joiner, its highest-confidence *surviving* neighbor under
+    the new schedule (paper Fig. 18: new nodes catch up by starting from
+    a high-confidence existing model).  None when every neighbor is
+    itself a joiner (fresh-init fallback)."""
+    slot_of = {u: i for i, u in enumerate(alive)}
+    survivor_set = set(survivors)
+    out: Dict[int, Optional[int]] = {}
+    for j in joiners:
+        i = slot_of[j]
+        best, best_w = None, 0.0
+        for k in range(sched.num_slots):
+            src = alive[sched.perms[k][i]]
+            w = float(sched.weights[i, k])
+            if src in survivor_set and w > best_w:
+                best, best_w = src, w
+        out[j] = best
+    return out
+
+
+@dataclasses.dataclass
+class ChurnStepRecord:
+    """One training step under the control plane."""
+
+    step: int
+    time: float
+    num_alive: int
+    loss: float
+    swapped: bool
+    cache_hit: bool
+    joined: Tuple[int, ...]
+    left: Tuple[int, ...]
+
+
+class ChurnTrainLoop:
+    """Drive a DFL train bundle under a scripted or stochastic churn trace.
+
+    ``make_params(node_id)`` initializes one client's (unstacked) param
+    tree; ``make_batch(node_ids, step)`` draws one stacked batch for the
+    current alive set, keyed by node identity so survivors keep their
+    shard across slot remaps.  ``local_step`` is the bundle's
+    ``sync="none"`` step ``(params, opt_state, batch) -> (params,
+    opt_state, metrics)``; the controller's mixer is applied to the
+    params afterwards — the hot-swap seam.
+    """
+
+    def __init__(self, controller: OverlayController, *,
+                 local_step: Callable,
+                 make_params: Callable[[int], object],
+                 optimizer,
+                 make_batch: Callable[[Sequence[int], int], object],
+                 step_time: float = 1.0,
+                 jit_local_step: bool = True):
+        import jax
+
+        self.controller = controller
+        self.optimizer = optimizer
+        self.make_params = make_params
+        self.make_batch = make_batch
+        self.step_time = step_time
+        self.local_step = (jax.jit(local_step) if jit_local_step
+                           else local_step)
+        self._jax = jax
+
+        self.assignment: Tuple[int, ...] = controller.alive
+        per_client = [make_params(u) for u in self.assignment]
+        self.params = self._stack(per_client)
+        self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self.records: List[ChurnStepRecord] = []
+
+    # ---- state surgery ---------------------------------------------------
+    def _stack(self, trees):
+        jnp = self._jax.numpy
+        return self._jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+    def _row(self, tree, i: int):
+        return self._jax.tree.map(lambda l: l[i], tree)
+
+    def client_params(self, node_id: int):
+        """The (unstacked) current model of one live client."""
+        return self._row(self.params, self.assignment.index(node_id))
+
+    def _remap(self, report: ControlReport) -> Tuple[Tuple[int, ...],
+                                                     Tuple[int, ...]]:
+        """Re-stack params/opt rows for the new alive set."""
+        jax = self._jax
+        old = self.assignment
+        new = report.alive
+        old_slot = {u: i for i, u in enumerate(old)}
+        new_set = set(new)
+        survivors = [u for u in new if u in old_slot]
+        joiners = [u for u in new if u not in old_slot]
+        left = tuple(u for u in old if u not in new_set)
+        donors = (joiner_donors(self.controller.schedule, new, joiners,
+                                survivors) if joiners else {})
+
+        param_rows, opt_rows = [], []
+        for u in new:
+            if u in old_slot:
+                i = old_slot[u]
+                param_rows.append(self._row(self.params, i))
+                opt_rows.append(self._row(self.opt_state, i))
+            else:
+                donor = donors.get(u)
+                if donor is not None:
+                    p = self._row(self.params, old_slot[donor])
+                else:
+                    p = self.make_params(u)
+                param_rows.append(p)
+                opt_rows.append(self.optimizer.init(p))
+        self.params = self._stack(param_rows)
+        self.opt_state = self._stack(opt_rows)
+        self.assignment = new
+        return tuple(joiners), left
+
+    # ---- the loop --------------------------------------------------------
+    def run(self, num_steps: int,
+            trace: Optional[ChurnTrace] = None) -> List[ChurnStepRecord]:
+        """``num_steps`` training steps, one control interval each."""
+        for step in range(num_steps):
+            report = self.controller.step(self.step_time, trace=trace)
+            joined, left = ((), ())
+            if report.alive != self.assignment:
+                joined, left = self._remap(report)
+            batch = self.make_batch(self.assignment, step)
+            params, opt_state, metrics = self.local_step(
+                self.params, self.opt_state, batch)
+            # the hot-swap seam: whatever mixer the controller holds now
+            self.params = self.controller.mixer(params)
+            self.opt_state = opt_state
+            self.records.append(ChurnStepRecord(
+                step=step, time=report.time,
+                num_alive=len(self.assignment),
+                loss=float(np.asarray(metrics["loss"])),
+                swapped=report.swapped, cache_hit=report.cache_hit,
+                joined=joined, left=left))
+        return self.records

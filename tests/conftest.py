@@ -36,13 +36,49 @@ except ModuleNotFoundError:
         def load_profile(*args, **kwargs):
             pass
 
+    class _DummyStrategy:
+        """Inert strategy stand-in: supports the combinator surface
+        (map/filter/flatmap/|) so module-level strategy expressions in
+        property-test files evaluate under collection."""
+
+        def map(self, *_a, **_k):
+            return self
+
+        def filter(self, *_a, **_k):
+            return self
+
+        def flatmap(self, *_a, **_k):
+            return self
+
+        def example(self):
+            return None
+
+        def __or__(self, _other):
+            return self
+
+        def __call__(self, *_a, **_k):
+            return self
+
     def _strategy(*_args, **_kwargs):
-        return None
+        return _DummyStrategy()
+
+    def _composite(fn):
+        # @st.composite functions must stay callable (they are invoked at
+        # module level to build strategies); the result is inert.
+        def build(*_a, **_k):
+            return _DummyStrategy()
+        return build
 
     _st = types.ModuleType("hypothesis.strategies")
     for _name in ("integers", "floats", "lists", "tuples", "sampled_from",
-                  "booleans", "just", "text", "one_of", "composite"):
+                  "booleans", "just", "text", "one_of", "none", "data",
+                  "dictionaries", "sets", "binary", "characters",
+                  "permutations"):
         setattr(_st, _name, _strategy)
+    _st.composite = _composite
+    _st.SearchStrategy = _DummyStrategy
+    # any strategy name we did not anticipate still resolves (PEP 562)
+    _st.__getattr__ = lambda _name: _strategy
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = _skip_given
@@ -51,6 +87,8 @@ except ModuleNotFoundError:
     _hyp.assume = lambda *a, **k: True
     _hyp.example = _skip_given
     _hyp.HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))
+    # cover both import spellings: ``from hypothesis import strategies``
+    # AND ``import hypothesis.strategies as st`` in property-test modules
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
     settings = _NoopSettings

@@ -87,6 +87,25 @@ def test_run_method_shim_deprecated(task):
     assert np.isfinite(res.final_mean_acc)
 
 
+@pytest.mark.parametrize("method", ("fedlay", "fedavg", "fedlay-noconf-sync"))
+def test_run_method_shim_parity_with_engine(task, method):
+    """The shim must emit DeprecationWarning AND reproduce Engine.run
+    bit-for-bit (same defaults, same seed => identical run)."""
+    with pytest.warns(DeprecationWarning):
+        old = run_method(method, task, total_time=4.0, model_bytes=1000,
+                         seed=0)
+    new = Engine().run(task, method, total_time=4.0, model_bytes=1000,
+                       seed=0)
+    assert old.method == new.method
+    assert [r.time for r in old.trace] == [r.time for r in new.trace]
+    assert [r.mean_acc for r in old.trace] == [r.mean_acc for r in new.trace]
+    assert old.comm_bytes_per_client == new.comm_bytes_per_client
+    assert old.messages_per_client == new.messages_per_client
+    assert len(old.final_params) == len(new.final_params)
+    for a, b in zip(old.final_params, new.final_params):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_gossip_spec_requires_topology(task):
     with pytest.raises(ValueError):
         Engine().run(task, MethodSpec(name="bare"), total_time=2.0,

@@ -1,0 +1,398 @@
+"""repro.overlay — the live churn control plane.
+
+Acceptance pins (ISSUE 2): after a scripted fail+join trace the
+controller's swapped-in mixer equals dense ``schedule_mixing_matrix``
+mixing on the post-churn alive set, and an unchanged-topology control
+step reports a compile-cache hit with no rebuild.  Plus coverage for the
+delta tracker, churn traces, schedule hashing, and the churn train loop
+(shard remap + joiner catch-up init) driving ``dfl_train_bundle``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mixing import (build_permute_schedule,
+                               schedule_from_addresses,
+                               schedule_mixing_matrix)
+from repro.core.ndmp import Simulator
+from repro.overlay import (ChurnEvent, ChurnTrace, ChurnTrainLoop,
+                           DeltaTracker, OverlayController, joiner_donors)
+
+
+def make_sim(n=12, L=3, seed=0):
+    sim = Simulator(num_spaces=L, latency=0.05, heartbeat_period=0.5,
+                    probe_period=1.0, seed=seed)
+    sim.seed_network(list(range(n)))
+    return sim
+
+
+# --------------------------------------------------------------------------
+# Schedule hashing / address-based compilation
+# --------------------------------------------------------------------------
+
+def test_permute_schedule_hash_eq():
+    a = build_permute_schedule(8, 3)
+    b = build_permute_schedule(8, 3)
+    c = build_permute_schedule(8, 2)
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a != c
+    assert len({a, b, c}) == 2          # usable as a dict/set key
+    d = build_permute_schedule(8, 3, confidence_weighted=False)
+    assert d == b                       # uniform profiles: weights agree
+
+
+def test_schedule_from_addresses_matches_range_build():
+    """Arbitrary-node-id compilation reduces to the static build when the
+    ids are exactly the mesh positions."""
+    sim = make_sim(n=10)
+    sched = schedule_from_addresses(sim.alive_addresses())
+    ref = build_permute_schedule(10, 3)
+    assert sched == ref
+
+
+def test_schedule_from_addresses_row_stochastic_after_churn():
+    sim = make_sim(n=16)
+    sim.fail(3)
+    sim.leave(8)
+    addrs = [a for a in sim.alive_addresses()]
+    sched = schedule_from_addresses(sorted(addrs, key=lambda a: a.node_id))
+    W = schedule_mixing_matrix(sched)
+    assert W.shape == (14, 14)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Delta tracker
+# --------------------------------------------------------------------------
+
+def test_delta_tracker_epochs_and_membership():
+    sim = make_sim(n=10)
+    tracker = DeltaTracker(sim)
+    # quiescent poll: no epoch advance
+    sim.run_for(0.01)
+    d0 = tracker.poll()
+    assert d0.empty and d0.epoch == 0
+    # a failure changes membership immediately, repairs change tables
+    sim.fail(4)
+    sim.run_for(10.0)
+    d1 = tracker.poll()
+    assert not d1.empty
+    assert d1.epoch == 1
+    assert d1.left == frozenset({4})
+    assert all(4 not in new for _, new in d1.changed.values())
+    # a join shows up as membership + table changes
+    sim.join(77, bootstrap=0)
+    sim.run_for(10.0)
+    d2 = tracker.poll()
+    assert d2.epoch == 2
+    assert d2.joined == frozenset({77})
+    # back to quiescence
+    d3 = tracker.poll()
+    assert d3.empty and d3.epoch == 2
+
+
+def test_tables_version_is_stable_when_quiescent():
+    sim = make_sim(n=8)
+    v0 = sim.tables_version()
+    assert sim.tables_version() == v0
+    sim.run_for(5.0)                 # heartbeats/probes, no churn
+    assert sim.tables_version() == v0
+    sim.fail(2)
+    assert sim.tables_version() != v0
+
+
+def test_tables_version_cannot_alias_fail_rejoin_in_one_window():
+    """A fail→rejoin of the same node between two polls restores the
+    alive set and resets the node's pointer versions — churn_ops still
+    forces a stamp change, so the delta is never silently missed."""
+    sim = make_sim(n=8)
+    v0 = sim.tables_version()
+    sim.fail(5)
+    sim.join(5, bootstrap=0)         # same id, same coords, fresh state
+    assert sim.tables_version() != v0
+    tracker = DeltaTracker(make_sim(n=8))
+    tracker.sim.fail(5)
+    tracker.sim.join(5, bootstrap=0)
+    assert not tracker.poll().empty  # the reset table is a real delta
+
+
+def test_mixer_cache_lru_bound():
+    from repro.overlay import MixerCache
+    built = []
+    cache = MixerCache(lambda s: built.append(s) or (lambda x: x),
+                       maxsize=2)
+    s = [build_permute_schedule(4, L) for L in (1, 2, 3)]
+    for sched in s:
+        cache.get(sched)
+    assert len(cache) == 2 and cache.evictions == 1
+    _, hit = cache.get(s[2])         # most recent: still cached
+    assert hit
+    _, hit = cache.get(s[0])         # evicted: recompiled
+    assert not hit
+    assert len(built) == 4
+
+
+# --------------------------------------------------------------------------
+# Churn traces
+# --------------------------------------------------------------------------
+
+def test_churn_trace_scripted_window_and_apply():
+    trace = ChurnTrace.scripted([(2.0, "fail", 1), (1.0, "join", 50, 0),
+                                 (3.0, "leave", 2)])
+    assert [e.time for e in trace.events] == [1.0, 2.0, 3.0]  # sorted
+    assert [e.kind for e in trace.between(0.0, 2.0)] == ["join", "fail"]
+    assert trace.between(2.0, 2.5) == ()     # window is half-open (t0, t1]
+    sim = make_sim(n=6)
+    ChurnTrace.apply(sim, trace.events)
+    sim.run_for(20.0)
+    assert set(sim.alive_ids()) == {0, 3, 4, 5, 50}
+    assert sim.correctness() == 1.0
+
+
+def test_churn_trace_stochastic_deterministic_and_bounded():
+    kw = dict(horizon=50.0, join_rate=0.2, fail_rate=0.1, leave_rate=0.1,
+              initial_ids=range(10), min_alive=4, seed=7)
+    a = ChurnTrace.stochastic(**kw)
+    b = ChurnTrace.stochastic(**kw)
+    assert a == b                         # same seed, same trace
+    assert ChurnTrace.stochastic(**{**kw, "seed": 8}) != a
+    alive = set(range(10))
+    for ev in a.events:
+        assert ev.time <= 50.0
+        if ev.kind == "join":
+            assert ev.node_id >= 10_000
+            alive.add(ev.node_id)
+        else:
+            assert ev.node_id in alive
+            alive.discard(ev.node_id)
+            assert len(alive) >= 4
+
+
+def test_churn_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        ChurnEvent(time=0.0, kind="explode", node_id=1)
+
+
+# --------------------------------------------------------------------------
+# Controller: the ISSUE acceptance pins
+# --------------------------------------------------------------------------
+
+def test_controller_swap_matches_dense_mixing_after_churn():
+    """Scripted fail+join trace: the swapped-in compiled mixer must equal
+    dense W@X of the post-churn alive set's schedule."""
+    sim = make_sim(n=12)
+    ctl = OverlayController(sim)
+    trace = ChurnTrace.scripted([(0.5, "fail", 3), (0.7, "fail", 7),
+                                 (1.2, "join", 100, 0)])
+    swapped_any = False
+    for _ in range(25):
+        r = ctl.step(1.0, trace=trace)
+        swapped_any = swapped_any or r.swapped
+        if sim.correctness() == 1.0 and sim.now > trace.horizon + 5.0:
+            break
+    assert swapped_any
+    assert sim.correctness() == 1.0
+    want_alive = tuple(sorted((set(range(12)) - {3, 7}) | {100}))
+    assert ctl.alive == want_alive
+    assert ctl.schedule.num_clients == len(want_alive)
+
+    m = len(ctl.alive)
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(m, 33)).astype(np.float32)
+    out = np.asarray(ctl.mixer(jnp.asarray(X)))
+    ref = schedule_mixing_matrix(ctl.schedule) @ X
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_controller_unchanged_topology_is_cache_hit_no_rebuild():
+    sim = make_sim(n=10)
+    ctl = OverlayController(sim)
+    rebuilds_before = ctl.rebuilds
+    r = ctl.step(1.0)                     # no churn scheduled
+    assert r.cache_hit
+    assert not r.rebuilt
+    assert not r.swapped
+    assert r.rebuild_ms == 0.0
+    assert ctl.rebuilds == rebuilds_before
+    # and the mixer object itself was not replaced
+    mixer = ctl.mixer
+    ctl.step(1.0)
+    assert ctl.mixer is mixer
+
+
+def test_controller_revisited_topology_hits_cache():
+    """fail -> rejoin of the same node restores the alive set, so the
+    rebuilt schedule hashes equal and the swap is a cache hit."""
+    sim = make_sim(n=8)
+    ctl = OverlayController(sim)
+    original = ctl.schedule
+    misses0 = ctl.cache.misses
+    for _ in range(20):
+        ctl.step(1.0, trace=ChurnTrace.scripted([(sim.now + 0.1, "fail", 5)]))
+        if sim.correctness() == 1.0 and len(ctl.alive) == 7:
+            break
+    assert ctl.schedule != original
+    assert ctl.cache.misses == misses0 + 1
+    swap_back = None
+    trace = ChurnTrace.scripted([(sim.now + 0.1, "join", 5, 0)])
+    for _ in range(20):
+        r = ctl.step(1.0, trace=trace)
+        trace = None
+        if r.swapped:
+            swap_back = r
+        if sim.correctness() == 1.0 and len(ctl.alive) == 8:
+            break
+    assert ctl.schedule == original       # node 5's coords are id-derived
+    assert swap_back is not None and swap_back.cache_hit
+    assert ctl.cache.misses == misses0 + 1   # no new compile on the way back
+
+
+def test_controller_shard_map_kind_returns_cached_body():
+    sim = make_sim(n=6, L=2)
+    ctl = OverlayController(sim, mixer_kind="shard_map")
+    body = ctl.mixer
+    assert callable(body)
+    r = ctl.step(1.0)
+    assert r.cache_hit and ctl.mixer is body
+
+
+def test_controller_confidence_profiles_shape_weights():
+    from repro.core.mep import ClientProfile
+    sim = make_sim(n=6, L=2)
+    rng = np.random.default_rng(0)
+
+    def profiles_fn(alive):
+        return {u: ClientProfile(
+            client_id=u, period=float(1.0 + (u % 3)),
+            label_histogram=rng.dirichlet(np.ones(4)))
+            for u in alive}
+
+    ctl = OverlayController(sim, profiles_fn=profiles_fn)
+    W = schedule_mixing_matrix(ctl.schedule)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+    # confidence weighting: rows are not the uniform simple average
+    ctl_uniform = OverlayController(make_sim(n=6, L=2))
+    assert ctl.schedule != ctl_uniform.schedule
+
+
+# --------------------------------------------------------------------------
+# Runtime: ChurnTrainLoop over dfl_train_bundle
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_bundle():
+    from repro.configs import REGISTRY, reduce_for_smoke
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import dfl_train_bundle
+    from repro.models.config import INPUT_SHAPES
+    from repro.optim.optimizers import adamw
+    cfg = reduce_for_smoke(REGISTRY["qwen3-4b"])
+    shape = dataclasses.replace(INPUT_SHAPES["train_4k"], global_batch=2,
+                                seq_len=32)
+    mesh = make_local_mesh(1, 1)
+    opt = adamw(1e-3)
+    bundle = dfl_train_bundle(cfg, shape, mesh, opt, dtype=jnp.float32,
+                              sync="none")
+    return cfg, opt, bundle
+
+
+def _loop_for(controller, cfg, opt, bundle):
+    from repro.models import init_params
+    per_client = {k: v.shape[1:] for k, v in bundle.arg_shapes[2].items()}
+
+    def make_params(node_id):
+        return init_params(cfg, jax.random.PRNGKey(node_id),
+                           dtype=jnp.float32)
+
+    def make_batch(node_ids, step):
+        out = {}
+        for k, shp in per_client.items():
+            rows = [np.random.default_rng(
+                abs(hash((u, step, k))) % 2**32).integers(
+                    0, cfg.vocab_size, shp) for u in node_ids]
+            out[k] = jnp.asarray(np.stack(rows), jnp.int32)
+        return out
+
+    return ChurnTrainLoop(controller, local_step=bundle.step,
+                          make_params=make_params, optimizer=opt,
+                          make_batch=make_batch, step_time=1.0)
+
+
+def test_dfl_train_bundle_accepts_controller_schedule():
+    """A controller's converged NDMP schedule can be baked into a static
+    fedlay bundle (the no-churn deployment path for sched=)."""
+    from repro.configs import REGISTRY, reduce_for_smoke
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import dfl_train_bundle
+    from repro.models.config import INPUT_SHAPES
+    from repro.optim.optimizers import adamw
+    cfg = reduce_for_smoke(REGISTRY["qwen3-4b"])
+    shape = dataclasses.replace(INPUT_SHAPES["train_4k"], global_batch=2,
+                                seq_len=32)
+    mesh = make_local_mesh(1, 1)          # C = 1 on the CPU test mesh
+    ctl = OverlayController(make_sim(n=1, L=2))
+    b = dfl_train_bundle(cfg, shape, mesh, adamw(1e-3), dtype=jnp.float32,
+                         sync="fedlay", sched=ctl.schedule)
+    assert jax.tree.leaves(b.arg_shapes[0])[0].shape[0] == 1
+    # schedule size must match the mesh's client count
+    eight = OverlayController(make_sim(n=8, L=2)).schedule
+    with pytest.raises(ValueError, match="8 clients"):
+        dfl_train_bundle(cfg, shape, mesh, adamw(1e-3), dtype=jnp.float32,
+                         sync="fedlay", sched=eight)
+    # and only permute-based strategies accept one
+    with pytest.raises(ValueError, match="fedlay/ring"):
+        dfl_train_bundle(cfg, shape, mesh, adamw(1e-3), dtype=jnp.float32,
+                         sync="allreduce", sched=ctl.schedule)
+
+
+def test_churn_train_loop_remaps_and_catches_up(tiny_bundle):
+    cfg, opt, bundle = tiny_bundle
+    sim = make_sim(n=4, L=2)
+    ctl = OverlayController(sim)
+    loop = _loop_for(ctl, cfg, opt, bundle)
+    trace = ChurnTrace.scripted([(2.5, "fail", 1), (4.5, "join", 50, 0)])
+    recs = loop.run(8, trace=trace)
+    assert len(recs) == 8
+    assert all(np.isfinite(r.loss) for r in recs)
+    fail_steps = [r for r in recs if r.left == (1,)]
+    join_steps = [r for r in recs if 50 in r.joined]
+    assert len(fail_steps) == 1 and fail_steps[0].num_alive == 3
+    assert len(join_steps) == 1 and join_steps[0].num_alive == 4
+    assert loop.assignment == (0, 2, 3, 50)
+    # joiner catch-up: node 50 started from a live model, not from init
+    from repro.models import init_params
+    fresh = init_params(cfg, jax.random.PRNGKey(50), dtype=jnp.float32)
+    joined = loop.client_params(50)
+    diffs = [float(jnp.abs(a - b).max())
+             for a, b in zip(jax.tree.leaves(fresh),
+                             jax.tree.leaves(joined))]
+    assert max(diffs) > 0.0
+
+
+def test_joiner_donors_prefers_highest_confidence_survivor():
+    sim = make_sim(n=8, L=2)
+    sim.join(100, bootstrap=0)
+    sim.run_for(20.0)
+    assert sim.correctness() == 1.0
+    alive = tuple(sim.alive_ids())
+    sched = schedule_from_addresses(
+        sorted(sim.alive_addresses(), key=lambda a: a.node_id))
+    donors = joiner_donors(sched, alive, joiners=(100,),
+                           survivors=tuple(range(8)))
+    donor = donors[100]
+    assert donor in set(range(8))
+    # the donor is a neighbor with the max schedule weight for slot of 100
+    i = alive.index(100)
+    weights = {}
+    for k in range(sched.num_slots):
+        src = alive[sched.perms[k][i]]
+        if src != 100:
+            weights[src] = max(weights.get(src, 0.0),
+                               float(sched.weights[i, k]))
+    assert donor in weights
+    assert weights[donor] == max(weights.values())
