@@ -1,19 +1,46 @@
-"""Shared benchmark plumbing: CSV emission + the paper's ML tasks in
-synthetic form (offline container)."""
+"""Shared benchmark plumbing: CSV emission (optionally mirrored into a
+JSON row capture for ``benchmarks.run --json``) + the paper's ML tasks
+in synthetic form (offline container)."""
 
 from __future__ import annotations
 
 import sys
 import time
 from contextlib import contextmanager
+from typing import Dict, List, Optional
 
 from repro.data.noniid import shard_partition
 from repro.data.synthetic import char_lm, cifar_like, mnist_like
 from repro.models.small import CNNTask, LSTMTask, MLPTask
 
+#: When not None, every emit() row is also appended here as a dict —
+#: the machine-readable path behind ``benchmarks.run --json``.
+_JSON_ROWS: Optional[List[Dict]] = None
+
+
+def start_json_capture() -> None:
+    """Begin mirroring emit() rows into an in-memory JSON row list."""
+    global _JSON_ROWS
+    _JSON_ROWS = []
+
+
+def end_json_capture() -> List[Dict]:
+    """Stop capturing and return the rows collected since start."""
+    global _JSON_ROWS
+    rows, _JSON_ROWS = _JSON_ROWS or [], None
+    return rows
+
+
+def _jsonable(v):
+    """np scalars → python scalars so json.dumps accepts every row."""
+    return v.item() if hasattr(v, "item") else v
+
 
 def emit(table: str, **fields) -> None:
     """One CSV row: table,key=value,..."""
+    if _JSON_ROWS is not None:
+        _JSON_ROWS.append({"table": table,
+                           **{k: _jsonable(v) for k, v in fields.items()}})
     kv = ",".join(f"{k}={v}" for k, v in fields.items())
     print(f"{table},{kv}")
     sys.stdout.flush()

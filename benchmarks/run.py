@@ -1,23 +1,28 @@
 """Benchmark harness front door — one module per paper table/figure plus
 the roofline and the beyond-paper collective comparison.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig8]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig8] [--json]
 
 Default is quick mode (CPU-friendly); --full reproduces the paper-scale
-settings.  Output: CSV rows ``table,key=value,...``.
+settings.  Output: CSV rows ``table,key=value,...``.  With ``--json``
+each benchmark additionally writes a machine-readable
+``BENCH_<name>.json`` at the repo root (rows + wall time + mode) so the
+perf trajectory accumulates across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
-from . import (churn_swap, crosspod, fig3_topology, fig8_churn, fig11_noniid,
-               fig12_async, fig13_locality, fig15_compute_cost,
+from . import (churn_swap, common, crosspod, fig3_topology, fig8_churn,
+               fig11_noniid, fig12_async, fig13_locality, fig15_compute_cost,
                fig16_confidence, fig18_churn_accuracy, fig20_scalability,
-               roofline, sync_collectives, table3_accuracy)
+               roofline, slot_runtime, sync_collectives, table3_accuracy)
 
 MODULES = {
     "fig3": fig3_topology,
@@ -34,7 +39,21 @@ MODULES = {
     "sync_collectives": sync_collectives,
     "crosspod": crosspod,
     "churn_swap": churn_swap,
+    "slot_runtime": slot_runtime,
 }
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _write_json(name: str, *, quick: bool, seconds: float, failed: bool,
+                rows) -> str:
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    payload = {"benchmark": name, "quick": quick,
+               "seconds": round(seconds, 2), "failed": failed, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main() -> int:
@@ -43,6 +62,8 @@ def main() -> int:
                     help="paper-scale settings (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<name>.json at the repo root")
     args = ap.parse_args()
 
     names = list(MODULES) if not args.only else args.only.split(",")
@@ -55,11 +76,21 @@ def main() -> int:
         mod = MODULES[name]
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
+        if args.json:
+            common.start_json_capture()
         try:
             mod.run(quick=not args.full)
         except Exception:  # noqa: BLE001 — keep the harness going
             failures.append(name)
             traceback.print_exc()
+        finally:
+            if args.json:
+                path = _write_json(
+                    name, quick=not args.full, seconds=time.time() - t0,
+                    failed=name in failures,
+                    rows=common.end_json_capture())
+                print(f"# wrote {os.path.relpath(path, REPO_ROOT)}",
+                      flush=True)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     if failures:
         print(f"# FAILED: {failures}", file=sys.stderr)

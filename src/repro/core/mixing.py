@@ -242,6 +242,75 @@ def schedule_from_addresses(addrs: Sequence[NodeAddress],
     )
 
 
+def pad_schedule(sched: PermuteSchedule, slots: Sequence[int],
+                 capacity: int) -> PermuteSchedule:
+    """Embed an n-client schedule into a fixed ``capacity``-slot layout.
+
+    ``slots[i]`` is the capacity slot hosting schedule slot ``i`` (the
+    :class:`repro.runtime.slots.SlotMap` assignment).  Dead capacity
+    slots **self-loop with weight 1**: identity perms, zero incoming
+    weights, self weight 1 — so a mixer compiled over the padded
+    schedule leaves dead rows untouched and never reads from them, and
+    the padded mixing matrix stays row-stochastic.  Padded schedules
+    hash by content like any other, so the overlay controller's compile
+    cache keys on them directly (same alive set + same slot layout ⇒
+    zero retrace).
+    """
+    n = sched.num_clients
+    if len(slots) != n:
+        raise ValueError(f"need one slot per schedule client: got "
+                         f"{len(slots)} slots for {n} clients")
+    if len(set(slots)) != n:
+        raise ValueError("duplicate capacity slots")
+    if any(s < 0 or s >= capacity for s in slots):
+        raise ValueError(f"slot out of range for capacity {capacity}")
+    perms: List[Tuple[int, ...]] = []
+    for k in range(sched.num_slots):
+        perm = list(range(capacity))          # dead slots: self-loop
+        for i in range(n):
+            perm[slots[i]] = slots[sched.perms[k][i]]
+        perms.append(tuple(perm))
+    weights = np.zeros((capacity, sched.num_slots), dtype=np.float32)
+    self_w = np.ones((capacity,), dtype=np.float32)
+    idx = np.asarray(slots, dtype=np.int64)
+    weights[idx] = sched.weights
+    self_w[idx] = sched.self_weight
+    return PermuteSchedule(num_clients=capacity, num_spaces=sched.num_spaces,
+                           perms=tuple(perms), weights=weights,
+                           self_weight=self_w)
+
+
+def masked_mixing_matrix(sched: PermuteSchedule,
+                         mask: Sequence[float]) -> np.ndarray:
+    """Dense equivalent of mask-aware mixing (the test oracle for
+    :func:`repro.dist.sync.global_mixer` with ``masked=True``).
+
+    Row ``i`` with ``mask[i] == 0`` is the identity (a dead or skipping
+    client keeps its own model and contributes to nobody).  Live rows
+    drop masked-out sources and renormalize over the surviving weights,
+    so the matrix stays row-stochastic for any 0/1 mask."""
+    m = np.asarray(mask, dtype=np.float64)
+    n = sched.num_clients
+    if m.shape != (n,):
+        raise ValueError(f"mask shape {m.shape} != ({n},)")
+    W = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        if m[i] == 0.0:
+            W[i, i] = 1.0
+            continue
+        eff = np.asarray(
+            [float(sched.weights[i, k]) * m[sched.perms[k][i]]
+             for k in range(sched.num_slots)])
+        total = float(sched.self_weight[i]) + eff.sum()
+        if total <= 0.0:
+            W[i, i] = 1.0
+            continue
+        W[i, i] = float(sched.self_weight[i]) / total
+        for k in range(sched.num_slots):
+            W[i, sched.perms[k][i]] += eff[k] / total
+    return W
+
+
 def schedule_mixing_matrix(sched: PermuteSchedule) -> np.ndarray:
     """Dense equivalent W of a permute schedule (for tests: the TPU path
     and the simulation path must agree)."""
@@ -268,10 +337,17 @@ def cross_pod_messages(sched: PermuteSchedule, pods: int) -> int:
     return crossing
 
 
+def participation_mults(periods: Sequence[float]) -> np.ndarray:
+    """Per-client periods → integer step multiples k_u (client u joins
+    the mixing collective every k_u local steps).  Host-side static; the
+    on-device mask for a traced step counter is
+    :func:`repro.runtime.masked.participation_mask`."""
+    base = min(periods)
+    return np.maximum(1, np.round(np.asarray(periods) / base).astype(np.int64))
+
+
 def multirate_participation(periods: Sequence[float], step: int) -> np.ndarray:
     """Bulk-synchronous image of MEP asynchrony: client u participates in
     the mixing collective at step t iff t % k_u == 0, where k_u is its
     period expressed in (integer) local steps.  Returns a 0/1 mask."""
-    base = min(periods)
-    mult = np.maximum(1, np.round(np.asarray(periods) / base).astype(np.int64))
-    return (step % mult == 0).astype(np.float32)
+    return (step % participation_mults(periods) == 0).astype(np.float32)

@@ -63,7 +63,8 @@ def ring_schedule(num_clients: int) -> PermuteSchedule:
 
 
 def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
-               self_weight: jnp.ndarray, axis_name: str):
+               self_weight: jnp.ndarray, axis_name: str,
+               mask: Optional[jnp.ndarray] = None):
     """One FedLay mixing round inside ``shard_map``.
 
     ``tree`` leaves carry a leading local-client dim (size 1 when the
@@ -71,17 +72,44 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
     supported layout); ``weights`` is the local (1, 2L) confidence-weight
     slice and ``self_weight`` the local (1,) self weight.  Equivalent to
     the dense ``W @ X`` of ``schedule_mixing_matrix(sched)``.
+
+    ``mask`` (optional, local (c,) 0/1 float) makes the round mask-aware:
+    a masked-out client (dead capacity slot, or a slow client skipping
+    this collective under multirate participation) keeps its own model,
+    and live clients drop its contribution and renormalize over the
+    surviving weights — the per-device image of
+    :func:`repro.core.mixing.masked_mixing_matrix`.  The mask rides the
+    same ppermutes as the models, so masking adds 2L scalar permutes,
+    not a retrace.
     """
+    masked = mask is not None
+    if masked:
+        m = mask.astype(jnp.float32)
+        eff = []
+        for k in range(sched.num_slots):
+            src_m = jax.lax.ppermute(m, axis_name,
+                                     perm=sched.ppermute_pairs(k))
+            eff.append(weights[:, k].astype(jnp.float32) * src_m)
+        total = self_weight.astype(jnp.float32) + sum(eff)
+        ok = (m > 0) & (total > 0)
+        safe = jnp.where(total > 0, total, 1.0)
+        self_w = (self_weight.astype(jnp.float32) / safe)
+        slot_w = [e / safe for e in eff]
+    else:
+        self_w = self_weight
+        slot_w = [weights[:, k] for k in range(sched.num_slots)]
 
     def mix_leaf(leaf):
         c = leaf.shape[0]
         shape = (c,) + (1,) * (leaf.ndim - 1)
-        acc = leaf * self_weight.reshape(shape).astype(leaf.dtype)
+        acc = leaf * self_w.reshape(shape).astype(leaf.dtype)
         for k in range(sched.num_slots):
             recv = jax.lax.ppermute(leaf, axis_name,
                                     perm=sched.ppermute_pairs(k))
-            w = weights[:, k].reshape(shape).astype(leaf.dtype)
+            w = slot_w[k].reshape(shape).astype(leaf.dtype)
             acc = acc + recv * w
+        if masked:
+            acc = jnp.where(ok.reshape(shape), acc, leaf)
         return acc
 
     return jax.tree.map(mix_leaf, tree)
@@ -136,7 +164,8 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
 
 
 def global_mixer(strategy: str,
-                 sched: Optional[PermuteSchedule] = None) -> Callable:
+                 sched: Optional[PermuteSchedule] = None,
+                 masked: bool = False) -> Callable:
     """Build a global-view mixer ``params -> params`` over the leading
     client axis (for auto-sharded jit, e.g. ``dfl_train_bundle``).
 
@@ -144,8 +173,18 @@ def global_mixer(strategy: str,
     ``params[perm_k]`` along the client dim — GSPMD lowers it to a
     collective-permute when that dim is client-sharded, i.e. exactly the
     neighbor exchange :func:`fedlay_mix` spells out by hand.
+
+    With ``masked=True`` the returned callable is ``(params, mask) ->
+    params`` where ``mask`` is a (C,) 0/1 float *runtime input* (no
+    retrace when it changes): masked-out rows keep their own model, live
+    rows drop masked-out sources and renormalize — the device image of
+    :func:`repro.core.mixing.masked_mixing_matrix`.  This is the seam
+    the fixed-capacity slot runtime (dead slots) and multirate
+    participation (slow clients skipping a collective) both plug into.
     """
     if strategy == "none":
+        if masked:
+            return lambda params, mask: params
         return lambda params: params
 
     if strategy == "allreduce":
@@ -155,7 +194,20 @@ def global_mixer(strategy: str,
                     jnp.mean(l.astype(jnp.float32), axis=0,
                              keepdims=True).astype(l.dtype), l.shape),
                 params)
-        return allreduce
+
+        def allreduce_masked(params, mask):
+            m = mask.astype(jnp.float32)
+            denom = jnp.maximum(jnp.sum(m), 1.0)
+
+            def mean_leaf(leaf):
+                shape = (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
+                mm = m.reshape(shape)
+                mean = jnp.sum(leaf.astype(jnp.float32) * mm, axis=0,
+                               keepdims=True) / denom
+                out = jnp.broadcast_to(mean.astype(leaf.dtype), leaf.shape)
+                return jnp.where(mm > 0, out, leaf)
+            return jax.tree.map(mean_leaf, params)
+        return allreduce_masked if masked else allreduce
 
     if strategy in ("fedlay", "ring"):
         if sched is None:
@@ -175,7 +227,28 @@ def global_mixer(strategy: str,
                     acc = acc + recv * w.astype(leaf.dtype)
                 return acc
             return jax.tree.map(mix_leaf, params)
-        return mix
+
+        def mix_masked(params, mask):
+            m = mask.astype(jnp.float32)
+            # (C, 2L) effective weights: source contributions gated by
+            # the source's mask, rows renormalized over what survives
+            eff = weights * jnp.take(m, perms, axis=0).T
+            total = self_w + eff.sum(axis=1)
+            ok = (m > 0) & (total > 0)
+            safe = jnp.where(total > 0, total, 1.0)
+            sw = self_w / safe
+            ew = eff / safe[:, None]
+
+            def mix_leaf(leaf):
+                shape = (C,) + (1,) * (leaf.ndim - 1)
+                acc = leaf * sw.reshape(shape).astype(leaf.dtype)
+                for k in range(sched.num_slots):
+                    recv = jnp.take(leaf, perms[k], axis=0)
+                    acc = acc + recv * ew[:, k].reshape(shape).astype(
+                        leaf.dtype)
+                return jnp.where(ok.reshape(shape), acc, leaf)
+            return jax.tree.map(mix_leaf, params)
+        return mix_masked if masked else mix
 
     raise ValueError(
         f"unknown sync strategy {strategy!r}; choose from {SYNC_STRATEGIES}")

@@ -24,6 +24,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+#: TPU vector lane width — every block's minor dim must be a multiple.
+LANE = 128
+
+
+def aligned_block_n(n: int, block_n: int, lane: int = LANE) -> int:
+    """The lane-aligned tile size actually used for an (K, n) mix.
+
+    The smallest multiple of ``lane`` covering ``n``, capped at
+    ``block_n`` (itself rounded up to a lane multiple).  A bare
+    ``min(block_n, n)`` is TPU-invalid whenever ``lane < n < block_n``
+    with ``n % lane != 0`` — it only ever worked in interpret mode."""
+    need = -(-n // lane) * lane
+    cap = max(lane, -(-block_n // lane) * lane)
+    return min(cap, need)
+
+
 def _mix_kernel(models_ref, weights_ref, out_ref):
     # models_ref: (K, BN); weights_ref: (K, 1); out: (BN,)
     w = weights_ref[...].astype(jnp.float32)            # (K, 1)
@@ -39,7 +55,7 @@ def weighted_mix(models: jnp.ndarray, weights: jnp.ndarray,
     N is padded to a lane multiple (128) internally.
     """
     K, N = models.shape
-    bn = min(block_n, max(128, N))
+    bn = aligned_block_n(N, block_n)
     pad = (-N) % bn
     if pad:
         models = jnp.pad(models, ((0, 0), (0, pad)))

@@ -212,14 +212,25 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      optimizer: Optimizer, dtype=jnp.bfloat16,
                      sync: str = "fedlay", num_spaces: int = 3,
                      remat: bool = True,
-                     sched: Optional[PermuteSchedule] = None) -> StepBundle:
+                     sched: Optional[PermuteSchedule] = None,
+                     masked: bool = False) -> StepBundle:
     """``sched`` overrides the internally built overlay schedule, e.g.
     to bake an :class:`repro.overlay.OverlayController`'s converged NDMP
     schedule into a static bundle; when None the static overlay over
     mesh data positions is built here.  (The live-churn loop,
     :class:`repro.overlay.runtime.ChurnTrainLoop`, instead composes a
     ``sync="none"`` bundle with the controller's hot-swapped mixer, so
-    the local step never recompiles on topology change.)"""
+    the local step never recompiles on topology change.)
+
+    ``masked=True`` builds the mask-aware step for the fixed-capacity
+    slot runtime (:class:`repro.runtime.SlotTrainLoop`) and multirate
+    participation: the step signature gains a trailing (C,) float32
+    0/1 ``mask`` input — dead or non-participating slots compute but
+    their param/optimizer updates are ``where``-gated away, mixing
+    drops masked-out sources and renormalizes
+    (:func:`repro.dist.sync.global_mixer` ``masked`` path), and the
+    reported loss is the masked mean over live slots.  The mask is a
+    runtime input, so it changes every step with zero retrace."""
     from ..core.mixing import build_permute_schedule
     from ..data.tokens import input_specs as data_specs
     if sync not in SYNC_STRATEGIES:
@@ -249,7 +260,7 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
             else None)
     elif sync == "ring":
         sched = ring_schedule(C)
-    mix = global_mixer(sync, sched)
+    mix = global_mixer(sync, sched, masked=masked)
 
     params_shape = jax.eval_shape(
         lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
@@ -276,13 +287,37 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     def per_client_loss(p, b):
         return train_loss(cfg, p, b, remat=remat, act_spec=act)
 
-    def train_step(params, opt_state, batch):
+    def local_updates(params, opt_state, batch):
         loss, grads = jax.vmap(jax.value_and_grad(per_client_loss))(
             params, batch)
         grads, _ = jax.vmap(lambda g: clip_by_global_norm(g, 1.0))(grads)
         updates, opt_state = jax.vmap(optimizer.update)(grads, opt_state,
                                                         params)
         params = jax.vmap(apply_updates)(params, updates)
+        return params, opt_state, loss
+
+    if masked:
+        from ..runtime.masked import masked_mean, masked_where
+
+        def masked_train_step(params, opt_state, batch, mask):
+            new_params, new_opt, loss = local_updates(params, opt_state,
+                                                      batch)
+            params = masked_where(mask, new_params, params)
+            opt_state = masked_where(mask, new_opt, opt_state)
+            params = mix(params, mask)
+            return params, opt_state, {"loss": masked_mean(loss, mask),
+                                       "num_alive": jnp.sum(mask)}
+
+        return StepBundle(
+            step=masked_train_step,
+            in_specs=(p_specs, o_specs, b_specs, P(client_axis)),
+            out_specs=(p_specs, o_specs, {"loss": P(), "num_alive": P()}),
+            arg_shapes=(stacked_shape, opt_shape, b_shapes,
+                        jax.ShapeDtypeStruct((C,), jnp.float32)),
+        )
+
+    def train_step(params, opt_state, batch):
+        params, opt_state, loss = local_updates(params, opt_state, batch)
         params = mix(params)
         return params, opt_state, {"loss": jnp.mean(loss)}
 

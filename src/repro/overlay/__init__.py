@@ -14,6 +14,11 @@ steps to keep the two consistent while nodes join, leave, and fail:
 * :mod:`repro.overlay.runtime` — :class:`ChurnTrainLoop`: the bundle's
   local step + the controller's mixer under a churn trace, with
   node-identity shard remapping and Fig.-18 joiner catch-up init.
+
+The re-stack loop retraces the local step once per distinct alive
+count; its static-shape sibling lives in :mod:`repro.runtime`
+(:class:`~repro.runtime.SlotTrainLoop` over a capacity-mode
+``OverlayController(capacity=C)`` — masked dead slots, zero retraces).
 """
 
 from . import controller, events, runtime

@@ -93,12 +93,12 @@ class MixerCache:
         return len(self._cache)
 
 
-def _global_mixer_factory(strategy: str = "fedlay"):
+def _global_mixer_factory(strategy: str = "fedlay", masked: bool = False):
     import jax
     from ..dist.sync import global_mixer
 
     def build(sched: PermuteSchedule) -> Callable:
-        return jax.jit(global_mixer(strategy, sched))
+        return jax.jit(global_mixer(strategy, sched, masked=masked))
     return build
 
 
@@ -108,6 +108,19 @@ def _shard_map_mixer_factory(axis_name: str, strategy: str = "fedlay"):
     def build(sched: PermuteSchedule) -> Callable:
         return make_mixer(strategy, sched, axis_name, sched.num_clients)
     return build
+
+
+@dataclasses.dataclass(frozen=True)
+class _StagedSwap:
+    """A fully built (but not yet live) data-plane state: what a control
+    step produced, waiting for :meth:`OverlayController.commit` at the
+    next step boundary."""
+
+    alive: Tuple[int, ...]
+    alive_schedule: PermuteSchedule
+    schedule: PermuteSchedule            # == alive_schedule unless capacity
+    mixer: Callable
+    plan: Optional[object]               # RemapPlan in capacity mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,7 +163,23 @@ class OverlayController:
                  mixer_factory: Optional[
                      Callable[[PermuteSchedule], Callable]] = None,
                  cache_size: int = 64,
-                 measure_correctness: bool = False):
+                 measure_correctness: bool = False,
+                 capacity: Optional[int] = None,
+                 double_buffered: bool = False):
+        """``capacity`` switches the controller into fixed-capacity slot
+        mode (:mod:`repro.runtime`): it owns a
+        :class:`~repro.runtime.slots.SlotMap`, pads every rebuilt
+        schedule to ``capacity`` (dead slots self-loop with weight 1),
+        and compiles **mask-aware** mixers ``(params, mask) -> params``
+        so the data-plane shapes never change under churn.
+
+        ``double_buffered`` defers the hot swap to the step boundary:
+        ``step()`` stages the rebuilt schedule + compiled mixer (and, in
+        capacity mode, the slot remap plan) without touching the live
+        ones; :meth:`commit` flips the buffers.  This lets a training
+        loop overlap the control step with the in-flight training step
+        and still swap at a well-defined boundary.
+        """
         if mixer_kind not in MIXER_KINDS:
             raise ValueError(f"unknown mixer kind {mixer_kind!r}; "
                              f"choose from {MIXER_KINDS}")
@@ -161,25 +190,41 @@ class OverlayController:
         self.confidence_weighted = confidence_weighted
         self.profiles_fn = profiles_fn
         self.measure_correctness = measure_correctness
+        self.capacity = capacity
+        self.double_buffered = double_buffered
+        self.slots = None
+        if capacity is not None:
+            if mixer_kind != "global" and mixer_factory is None:
+                raise ValueError(
+                    "capacity mode compiles mask-aware global mixers; "
+                    "use mixer_kind='global' or pass a mixer_factory")
+            from ..runtime.slots import SlotMap  # lazy: avoids the
+            self.slots = SlotMap(capacity)       # runtime<->overlay cycle
         if mixer_factory is None:
-            mixer_factory = (_global_mixer_factory(strategy)
-                             if mixer_kind == "global"
-                             else _shard_map_mixer_factory(axis_name,
-                                                           strategy))
+            mixer_factory = (_global_mixer_factory(
+                strategy, masked=capacity is not None)
+                if mixer_kind == "global"
+                else _shard_map_mixer_factory(axis_name, strategy))
         self.cache = MixerCache(mixer_factory, maxsize=cache_size)
         self.rebuilds = 0
         self.swaps = 0
         self._alive: Tuple[int, ...] = ()
         self._schedule: Optional[PermuteSchedule] = None
+        self._alive_schedule: Optional[PermuteSchedule] = None
         self._mixer: Optional[Callable] = None
+        self._staged: Optional[_StagedSwap] = None
+        self.last_plan = None
         # trace cursor: end of the last processed control window.  Starts
         # at -inf so events scheduled at or before the first window's
         # start (e.g. t=0 mass churn) are applied rather than silently
         # falling outside the half-open (t0, t1] window.
         self._applied_until = float("-inf")
         # initial build for the seed network (not counted as churn-driven
-        # rebuild/swap activity; its compile-cache miss is kept)
+        # rebuild/swap activity; its compile-cache miss is kept).  The
+        # initial swap commits immediately even when double-buffered.
         self._refresh(force=True)
+        self.commit()
+        self.last_plan = None
         self.rebuilds = 0
         self.swaps = 0
 
@@ -192,8 +237,23 @@ class OverlayController:
 
     @property
     def schedule(self) -> PermuteSchedule:
+        """The live schedule — capacity-padded in capacity mode."""
         assert self._schedule is not None
         return self._schedule
+
+    @property
+    def alive_schedule(self) -> PermuteSchedule:
+        """The live schedule over the alive set only (unpadded) —
+        slot ``i`` hosts ``alive[i]``.  Donor selection
+        (:func:`~repro.overlay.runtime.joiner_donors`) works in this
+        space."""
+        assert self._alive_schedule is not None
+        return self._alive_schedule
+
+    def alive_mask(self):
+        """(capacity,) 0/1 float32 alive mask (capacity mode only)."""
+        assert self.slots is not None, "alive_mask needs capacity mode"
+        return self.slots.alive_mask()
 
     @property
     def mixer(self) -> Callable:
@@ -231,47 +291,90 @@ class OverlayController:
         ChurnTrace.apply(self.sim, sorted(due, key=lambda e: e.time))
         self.sim.run_until(t_end)
         delta = self.tracker.poll()
-        swapped, rebuilt, cache_hit, rebuild_ms = self._refresh(
+        if self._staged is None:
+            self.last_plan = None
+        swapped, rebuilt, cache_hit, rebuild_ms, alive = self._refresh(
             force=bool(delta.joined or delta.left))
         return ControlReport(
             epoch=self.tracker.epoch, time=self.sim.now,
-            alive=self._alive, delta=delta, swapped=swapped,
+            alive=alive, delta=delta, swapped=swapped,
             rebuilt=rebuilt, cache_hit=cache_hit, rebuild_ms=rebuild_ms,
             correctness=(self.sim.correctness()
                          if self.measure_correctness else None))
+
+    def commit(self):
+        """Apply the staged swap at the step boundary (no-op unless
+        ``double_buffered`` staged one).  Returns the
+        :class:`~repro.runtime.slots.RemapPlan` of the most recent
+        applied membership change (None when membership is unchanged or
+        outside capacity mode) so slot train loops can turn it into
+        in-place row writes."""
+        if self._staged is not None:
+            staged, self._staged = self._staged, None
+            self._apply(staged)
+        return self.last_plan
 
     # ---- internals -------------------------------------------------------
     def _alive_addresses(self) -> Tuple[NodeAddress, ...]:
         return tuple(sorted(self.sim.alive_addresses(),
                             key=lambda a: a.node_id))
 
-    def _refresh(self, force: bool) -> Tuple[bool, bool, bool, float]:
+    def _refresh(self, force: bool) -> Tuple[bool, bool, bool, float,
+                                             Tuple[int, ...]]:
         """Reconcile schedule+mixer with the live tables.
 
-        Returns (swapped, rebuilt, cache_hit, rebuild_ms).  Without
-        ``force`` (empty delta) the current mixer stays live and the
-        step counts as a cache hit with no rebuild.
+        Returns (swapped, rebuilt, cache_hit, rebuild_ms, alive).
+        Without ``force`` (empty delta) the current mixer stays live and
+        the step counts as a cache hit with no rebuild.  When
+        ``double_buffered`` the rebuilt state is staged (``swapped``
+        then means "a different mixer is pending") and goes live only at
+        :meth:`commit`.
         """
         if not force and self._schedule is not None:
             # quiescent step: same schedule, genuine cache lookup, no
             # host-side rebuild and no retrace
             self._mixer, hit = self.cache.get(self._schedule)
-            return False, False, hit, 0.0
+            alive = (self._staged.alive if self._staged is not None
+                     else self._alive)
+            return False, False, hit, 0.0, alive
         t0 = _time.perf_counter()
         addrs = self._alive_addresses()
-        profiles = (self.profiles_fn(tuple(a.node_id for a in addrs))
+        alive = tuple(a.node_id for a in addrs)
+        profiles = (self.profiles_fn(alive)
                     if self.profiles_fn is not None else None)
-        sched = schedule_from_addresses(
+        alive_sched = schedule_from_addresses(
             addrs, profiles=profiles, alpha_d=self.alpha_d,
             alpha_c=self.alpha_c,
             confidence_weighted=self.confidence_weighted)
+        plan = None
+        sched = alive_sched
+        if self.slots is not None:
+            from ..core.mixing import pad_schedule
+            plan = self.slots.plan(alive)
+            slot_of = plan.slot_of
+            sched = pad_schedule(alive_sched,
+                                 [slot_of[u] for u in alive],
+                                 self.capacity)
         rebuild_ms = (_time.perf_counter() - t0) * 1e3
         self.rebuilds += 1
         mixer, hit = self.cache.get(sched)
         swapped = sched != self._schedule
         if swapped:
             self.swaps += 1
-        self._alive = tuple(a.node_id for a in addrs)
-        self._schedule = sched
-        self._mixer = mixer
-        return swapped, True, hit, rebuild_ms
+        staged = _StagedSwap(alive=alive, alive_schedule=alive_sched,
+                             schedule=sched, mixer=mixer, plan=plan)
+        if self.double_buffered:
+            self._staged = staged
+        else:
+            self._apply(staged)
+        return swapped, True, hit, rebuild_ms, alive
+
+    def _apply(self, staged: _StagedSwap) -> None:
+        """Make a staged swap live (slot remap, schedule, mixer)."""
+        if staged.plan is not None:
+            self.slots.apply(staged.plan)
+            self.last_plan = staged.plan if staged.plan.changed else None
+        self._alive = staged.alive
+        self._alive_schedule = staged.alive_schedule
+        self._schedule = staged.schedule
+        self._mixer = staged.mixer

@@ -13,6 +13,24 @@ Two host-side primitives the control plane is built from:
 
 Neither touches device state; :mod:`repro.overlay.controller` turns the
 deltas into recompiled mixers.
+
+Churn-window cursor semantics
+-----------------------------
+The controller consumes a trace through an **applied-window cursor**:
+each ``OverlayController.step(dt, trace=...)`` takes the events in the
+half-open window ``(applied_until, now + dt]`` and advances
+``applied_until`` to ``now + dt``.  Two consequences worth knowing:
+
+* the cursor starts at ``-inf``, so events stamped at or before the
+  first window's start — e.g. a ``t=0`` mass-churn prologue — fire on
+  the *first* ``step()`` instead of silently falling outside the
+  window;
+* the cursor advances **whether or not a trace was passed**, so a trace
+  must be supplied on *every* ``step()`` that should observe it.
+  Handing the controller a trace after stepping past its event times
+  (or only on some steps) silently skips the past-time events — they
+  are never retroactively applied.  Benchmarks that need to sample
+  state "right after injection" use a ``dt=0`` priming step.
 """
 
 from __future__ import annotations

@@ -154,6 +154,10 @@ class ChurnTrainLoop:
         """``num_steps`` training steps, one control interval each."""
         for step in range(num_steps):
             report = self.controller.step(self.step_time, trace=trace)
+            # land any staged swap before touching state (no-op unless
+            # the controller is double_buffered) — report.alive and the
+            # mixer must describe the same epoch
+            self.controller.commit()
             joined, left = ((), ())
             if report.alive != self.assignment:
                 joined, left = self._remap(report)

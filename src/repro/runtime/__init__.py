@@ -1,0 +1,35 @@
+"""``repro.runtime`` — fixed-capacity slot runtime for static-shape
+training under churn.
+
+The re-stack loop (:class:`repro.overlay.runtime.ChurnTrainLoop`) pays
+one local-step retrace per distinct alive count.  This package removes
+that tax: the client axis is a fixed ``capacity`` of slots, dead slots
+are masked (self-loop weight 1 in the mixer, ``where``-gated updates in
+the local step), and membership changes become in-place row writes —
+device shapes are fully static, so the local step compiles **once per
+capacity, ever**.
+
+* :mod:`repro.runtime.slots` — :class:`SlotMap`: node id ↔ capacity
+  slot with a free heap, alive mask, and identity-preserving
+  :class:`RemapPlan`;
+* :mod:`repro.runtime.masked` — the mask-aware wrappers (masked local
+  step, capacity-padded schedules, masked-mean metrics, on-device
+  multirate participation);
+* :mod:`repro.runtime.loop` — :class:`SlotTrainLoop`, the static-shape
+  sibling of ``ChurnTrainLoop``, plus the :func:`counting_jit` retrace
+  instrumentation.
+"""
+
+from . import loop, masked, slots
+from .loop import SlotStepRecord, SlotTrainLoop, TraceCount, counting_jit
+from .masked import (broadcast_mask, masked_local_step, masked_mean,
+                     masked_where, pad_to_capacity, participation_mask)
+from .slots import RemapPlan, SlotCapacityError, SlotMap
+
+__all__ = [
+    "loop", "masked", "slots",
+    "SlotStepRecord", "SlotTrainLoop", "TraceCount", "counting_jit",
+    "broadcast_mask", "masked_local_step", "masked_mean", "masked_where",
+    "pad_to_capacity", "participation_mask",
+    "RemapPlan", "SlotCapacityError", "SlotMap",
+]

@@ -1,0 +1,248 @@
+"""The static-shape sibling of :class:`repro.overlay.runtime.ChurnTrainLoop`.
+
+:class:`SlotTrainLoop` trains against a **fixed-capacity** client axis:
+the jitted local step sees (capacity, ...) shapes on every step of the
+run, no matter how membership churns — one trace ever per capacity,
+versus the re-stack loop's one trace per distinct alive count.  The
+moving parts:
+
+* the :class:`~repro.overlay.controller.OverlayController` runs in
+  capacity mode (it owns the :class:`~repro.runtime.slots.SlotMap`,
+  pads rebuilt schedules so dead slots self-loop with weight 1, and
+  compiles mask-aware mixers ``(params, mask) -> params``);
+* membership changes become **in-place row writes** at the step
+  boundary: joiners are written into their assigned slot (donor copy
+  from the highest-confidence surviving neighbor — the paper's Fig. 18
+  catch-up — or fresh init for all-joiner cohorts), leavers simply go
+  dead in the mask;
+* the local step is mask-aware (``(params, opt_state, batch, mask)``,
+  e.g. :func:`repro.runtime.masked.masked_local_step` or
+  :func:`repro.launch.steps.dfl_train_bundle` with ``masked=True``):
+  dead slots compute but their updates are discarded;
+* multirate participation (``periods``) rides the same mask: a slow
+  client trains locally every step but only joins the mixing collective
+  when ``step % k_u == 0`` — the mask is a runtime input, so this costs
+  zero retraces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.mixing import multirate_participation
+from ..overlay.controller import OverlayController
+from ..overlay.events import ChurnTrace
+from ..overlay.runtime import joiner_donors
+from .slots import RemapPlan
+
+
+@dataclasses.dataclass
+class TraceCount:
+    """Counts Python re-executions of a jitted function's body — i.e.
+    XLA traces.  ``retraces`` excludes the unavoidable first trace."""
+
+    traces: int = 0
+
+    @property
+    def retraces(self) -> int:
+        return max(0, self.traces - 1)
+
+
+def counting_jit(fn: Callable) -> Tuple[Callable, TraceCount]:
+    """``jax.jit(fn)`` plus a :class:`TraceCount` that ticks once per
+    trace (compiled executions skip the Python body, so they don't
+    count).  The retrace-tax instrumentation used by
+    ``benchmarks/slot_runtime``."""
+    import jax
+
+    counter = TraceCount()
+
+    def counted(*args, **kwargs):
+        counter.traces += 1
+        return fn(*args, **kwargs)
+    return jax.jit(counted), counter
+
+
+@dataclasses.dataclass
+class SlotStepRecord:
+    """One training step of the slot runtime."""
+
+    step: int
+    time: float
+    num_alive: int
+    participating: int
+    loss: float
+    swapped: bool
+    cache_hit: bool
+    joined: Tuple[int, ...]
+    left: Tuple[int, ...]
+
+
+class SlotTrainLoop:
+    """Drive a mask-aware local step under churn with static shapes.
+
+    Same host contract as :class:`~repro.overlay.runtime.ChurnTrainLoop`
+    — ``make_params(node_id)`` one client's unstacked param tree,
+    ``make_batch(node_ids, step)`` a stacked batch for the given alive
+    set keyed by node identity — so the two loops are drop-in
+    comparable on the same churn trace (the ``benchmarks/slot_runtime``
+    parity check).  ``local_step`` is the mask-aware step ``(params,
+    opt_state, batch, mask) -> (params, opt_state, metrics)``.
+
+    ``periods`` (optional, node id → MEP period) enables multirate
+    participation: the mixing mask at step t is ``alive & (t % k_u ==
+    0)``; the local-step mask stays pure aliveness (slow clients keep
+    training locally, per the paper's asynchrony model).
+
+    The step counter persists across :meth:`run` calls, so churn traces
+    and participation phases stay consistent when driven incrementally.
+    """
+
+    def __init__(self, controller: OverlayController, *,
+                 local_step: Callable,
+                 make_params: Callable[[int], object],
+                 optimizer,
+                 make_batch: Callable[[Sequence[int], int], object],
+                 periods: Optional[Dict[int, float]] = None,
+                 step_time: float = 1.0,
+                 jit_local_step: bool = True):
+        import jax
+
+        if controller.slots is None:
+            raise ValueError(
+                "SlotTrainLoop needs a capacity-mode controller "
+                "(OverlayController(..., capacity=C))")
+        self.controller = controller
+        self.capacity = controller.capacity
+        self.optimizer = optimizer
+        self.make_params = make_params
+        self.make_batch = make_batch
+        self.periods = periods
+        self.step_time = step_time
+        self.local_step = (jax.jit(local_step) if jit_local_step
+                           else local_step)
+        self._jax = jax
+        self._step = 0
+
+        # capacity-stacked state: live slots get their node's init, dead
+        # slots zeros (their rows are masked and mixed as self-loops)
+        template = None
+        rows = []
+        for slot in range(self.capacity):
+            node = controller.slots.node_at(slot)
+            if node is not None:
+                row = make_params(node)
+                template = template if template is not None else row
+                rows.append(row)
+            else:
+                rows.append(None)
+        if template is None:
+            raise ValueError("controller has no live nodes")
+        dead = jax.tree.map(lambda l: jax.numpy.zeros_like(l), template)
+        rows = [r if r is not None else dead for r in rows]
+        self.params = self._stack(rows)
+        self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self.records: List[SlotStepRecord] = []
+
+    # ---- state surgery ---------------------------------------------------
+    def _stack(self, trees):
+        jnp = self._jax.numpy
+        return self._jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+    def _row(self, tree, i: int):
+        return self._jax.tree.map(lambda l: l[i], tree)
+
+    def _set_row(self, tree, i: int, row):
+        return self._jax.tree.map(
+            lambda l, r: l.at[i].set(r.astype(l.dtype)), tree, row)
+
+    def client_params(self, node_id: int):
+        """The (unstacked) current model of one live client."""
+        return self._row(self.params, self.controller.slots.slot_of[node_id])
+
+    def _apply_plan(self, plan: RemapPlan) -> Tuple[Tuple[int, ...],
+                                                    Tuple[int, ...]]:
+        """Membership change as in-place row writes: joiners get a donor
+        copy (Fig. 18 catch-up from the highest-confidence surviving
+        neighbor) or a fresh init when every neighbor is itself a
+        joiner; leavers' rows just go dead in the mask."""
+        ctl = self.controller
+        joiners = tuple(u for u, _ in plan.joiners)
+        survivors = tuple(u for u, _ in plan.survivors)
+        donors = (joiner_donors(ctl.alive_schedule, ctl.alive, joiners,
+                                survivors) if joiners else {})
+        for node, slot in plan.joiners:
+            donor = donors.get(node)
+            if donor is not None:
+                row = self._row(self.params, ctl.slots.slot_of[donor])
+            else:
+                row = self.make_params(node)
+            self.params = self._set_row(self.params, slot, row)
+            self.opt_state = self._jax.tree.map(
+                lambda l, r: l.at[slot].set(r.astype(l.dtype)),
+                self.opt_state, self.optimizer.init(row))
+        return joiners, tuple(u for u, _ in plan.leavers)
+
+    # ---- per-step masks and batches --------------------------------------
+    def _mix_mask(self, alive: Tuple[int, ...],
+                  alive_mask: np.ndarray, step: int) -> np.ndarray:
+        if self.periods is None:
+            return alive_mask
+        part = multirate_participation(
+            [self.periods.get(u, 1.0) for u in alive], step)
+        mask = alive_mask.copy()
+        slot_of = self.controller.slots.slot_of
+        for i, u in enumerate(alive):
+            mask[slot_of[u]] *= part[i]
+        return mask
+
+    def _capacity_batch(self, alive: Tuple[int, ...], step: int):
+        """Scatter the alive-set batch onto capacity rows (dead slots
+        replay row 0's data; their compute is discarded by the mask)."""
+        jnp = self._jax.numpy
+        batch = self.make_batch(alive, step)
+        pos = {u: i for i, u in enumerate(alive)}
+        idx = np.zeros((self.capacity,), dtype=np.int32)
+        for slot in range(self.capacity):
+            node = self.controller.slots.node_at(slot)
+            if node is not None:
+                idx[slot] = pos[node]
+        gather = jnp.asarray(idx)
+        return self._jax.tree.map(
+            lambda l: jnp.take(l, gather, axis=0), batch)
+
+    # ---- the loop --------------------------------------------------------
+    def run(self, num_steps: int,
+            trace: Optional[ChurnTrace] = None) -> List[SlotStepRecord]:
+        """``num_steps`` training steps, one control interval each."""
+        jnp = self._jax.numpy
+        ctl = self.controller
+        for _ in range(num_steps):
+            step = self._step
+            report = ctl.step(self.step_time, trace=trace)
+            plan = ctl.commit()          # swap lands at the step boundary
+            joined, left = ((), ())
+            if plan is not None and plan.changed:
+                joined, left = self._apply_plan(plan)
+            alive = ctl.alive
+            alive_mask = ctl.alive_mask()
+            mask = jnp.asarray(alive_mask)
+            mix_mask = jnp.asarray(self._mix_mask(alive, alive_mask, step))
+            batch = self._capacity_batch(alive, step)
+            params, opt_state, metrics = self.local_step(
+                self.params, self.opt_state, batch, mask)
+            # the hot-swap seam: the controller's mask-aware mixer; slow
+            # or dead slots pass through untouched
+            self.params = ctl.mixer(params, mix_mask)
+            self.opt_state = opt_state
+            self.records.append(SlotStepRecord(
+                step=step, time=report.time, num_alive=len(alive),
+                participating=int(np.asarray(mix_mask).sum()),
+                loss=float(np.asarray(metrics["loss"])),
+                swapped=report.swapped, cache_hit=report.cache_hit,
+                joined=joined, left=left))
+            self._step += 1
+        return self.records

@@ -1,0 +1,101 @@
+"""Mask-aware wrappers: everything the slot runtime computes per step
+against a static-capacity client axis with some slots dead.
+
+Three mask consumers, one convention — a (capacity,) 0/1 float32 vector,
+1 = live and participating:
+
+* the **local step**: :func:`masked_local_step` gates parameter and
+  optimizer updates with ``where`` (dead rows stay frozen bit-for-bit;
+  a NaN loss on a dead slot's garbage row cannot leak into live state
+  or metrics) and reduces per-client metrics with :func:`masked_mean`;
+* the **mixer**: :func:`repro.dist.sync.global_mixer` with
+  ``masked=True`` (compiled over a :func:`pad_to_capacity` schedule
+  whose dead slots self-loop with weight 1) takes the mask as a runtime
+  input, so participation can change every step with zero retrace;
+* **multirate participation** (the async open item):
+  :func:`participation_mask` evaluates t % k_u == 0 on device from the
+  host-static :func:`repro.core.mixing.participation_mults`, so slow
+  clients skip mixing collectives without leaving the compiled program.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mixing import (PermuteSchedule, pad_schedule,
+                           participation_mults)
+
+
+def broadcast_mask(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a (C,) mask to broadcast against a (C, ...) leaf."""
+    return mask.reshape((leaf.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def masked_where(mask: jnp.ndarray, new, old):
+    """Per-row select: new where mask > 0, old elsewhere (tree-mapped)."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(broadcast_mask(mask, n) > 0, n, o), new, old)
+
+
+def masked_mean(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean of ``values`` over live rows only.  Dead rows are zeroed
+    with ``where`` before the sum, so a NaN on a dead slot cannot
+    poison the reduction."""
+    m = mask.astype(jnp.float32)
+    mm = broadcast_mask(m, values)
+    v = jnp.where(mm > 0, values.astype(jnp.float32), 0.0)
+    return jnp.sum(v) / jnp.maximum(jnp.sum(mm) * (values.size // m.size), 1.0)
+
+
+def masked_local_step(step: Callable) -> Callable:
+    """Wrap a stacked local step ``(params, opt_state, batch) ->
+    (params, opt_state, metrics)`` — per-client metrics leaves carry the
+    leading client dim — into its mask-aware sibling ``(params,
+    opt_state, batch, mask) -> ...``.
+
+    Dead slots still *compute* (the shapes are static; that is the whole
+    point) but their updates are discarded: params and optimizer rows
+    are ``where``-gated back to their previous values, and metrics
+    leaves whose leading dim matches the mask are masked-mean reduced.
+    """
+
+    def masked_step(params, opt_state, batch, mask):
+        new_params, new_opt, metrics = step(params, opt_state, batch)
+        new_params = masked_where(mask, new_params, params)
+        new_opt = masked_where(mask, new_opt, opt_state)
+        n = mask.shape[0]
+        metrics = jax.tree.map(
+            lambda v: (masked_mean(v, mask)
+                       if getattr(v, "ndim", 0) >= 1 and v.shape[0] == n
+                       else v), metrics)
+        return new_params, new_opt, metrics
+    return masked_step
+
+
+def pad_to_capacity(sched: PermuteSchedule, slots) -> PermuteSchedule:
+    """Pad an alive-set schedule to a :class:`~repro.runtime.slots
+    .SlotMap`'s capacity.  ``sched`` slot order must be the map's live
+    nodes in **sorted id order** (the overlay controller's convention).
+    Dead capacity slots self-loop with weight 1."""
+    alive_sorted = sorted(slots.slot_of)
+    if len(alive_sorted) != sched.num_clients:
+        raise ValueError(
+            f"schedule is for {sched.num_clients} clients, slot map "
+            f"holds {len(alive_sorted)}")
+    assignment = [slots.slot_of[u] for u in alive_sorted]
+    return pad_schedule(sched, assignment, slots.capacity)
+
+
+def participation_mask(mults: Sequence[int], step) -> jnp.ndarray:
+    """On-device multirate participation: 1 where ``step % k_u == 0``.
+
+    ``mults`` is the host-static :func:`repro.core.mixing
+    .participation_mults` vector; ``step`` may be a traced scalar, so
+    the mask lives inside the compiled program — slow clients skip the
+    mixing collective with zero retrace."""
+    k = jnp.asarray(np.asarray(mults, dtype=np.int64))
+    return (jnp.asarray(step) % k == 0).astype(jnp.float32)

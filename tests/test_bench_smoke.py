@@ -1,20 +1,51 @@
 """Benchmark-harness smoke: the quick-mode front door must exit 0 so
 benchmark-breaking API changes fail tier-1 instead of silently rotting
-(fig3 exercises the topology-metrics path end to end in seconds)."""
+(fig3 exercises the topology-metrics path, churn_swap the overlay
+control plane, slot_runtime the fixed-capacity runtime — all
+seconds-fast in quick mode)."""
 
+import json
 import os
 import subprocess
 import sys
 
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-def test_benchmarks_quick_fig3():
-    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+def _run(*args):
     env = dict(os.environ)
-    src = os.path.join(repo, "src")
+    src = os.path.join(REPO, "src")
     env["PYTHONPATH"] = src + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    res = subprocess.run(
-        [sys.executable, "-m", "benchmarks.run", "--only", "fig3"],
-        cwd=repo, env=env, capture_output=True, text=True, timeout=600)
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+
+
+def test_benchmarks_quick_fig3():
+    res = _run("--only", "fig3")
     assert res.returncode == 0, res.stderr[-2000:]
     assert "fig3" in res.stdout
+
+
+def test_benchmarks_quick_churn_and_slot_runtime_json():
+    """churn_swap + slot_runtime in quick mode through the --json path:
+    exit 0, machine-readable BENCH_<name>.json rows at the repo root,
+    and the slot runtime's zero-retrace claim visible in them."""
+    res = _run("--only", "churn_swap,slot_runtime", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    by_name = {}
+    for name in ("churn_swap", "slot_runtime"):
+        path = os.path.join(REPO, f"BENCH_{name}.json")
+        assert os.path.exists(path), name
+        with open(path) as f:
+            data = json.load(f)
+        assert data["benchmark"] == name and data["quick"]
+        assert not data["failed"] and data["rows"]
+        by_name[name] = data
+    by_loop = {r["loop"]: r for r in by_name["slot_runtime"]["rows"]
+               if r["table"] == "slot_runtime"}
+    assert by_loop["slot"]["retraces"] == 0
+    assert by_loop["slot"]["distinct_alive"] >= 3
+    assert by_loop["restack"]["retraces"] >= by_loop["restack"][
+        "distinct_alive"] - 1

@@ -23,7 +23,12 @@ TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("K,N,bn", [(1, 128, 128), (3, 1000, 256),
                                     (7, 4096, 1024), (13, 65536, 65536),
-                                    (5, 131, 128)])
+                                    (5, 131, 128),
+                                    # 128 < N < block_n with N % 128 != 0:
+                                    # the lane-alignment regression (the
+                                    # old min(block_n, N) block was
+                                    # TPU-invalid here)
+                                    (3, 200, 65536), (5, 300, 512)])
 def test_weighted_mix_sweep(K, N, bn, dtype):
     m = jnp.asarray(RNG.normal(size=(K, N)), dtype)
     w = jnp.asarray(RNG.random(K).astype(np.float32))
@@ -44,6 +49,23 @@ def test_weighted_mix_property(K, N, seed):
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(weighted_mix_ref(m, w)),
                                rtol=3e-5, atol=3e-5)
+
+
+def test_weighted_mix_block_is_always_lane_aligned():
+    """Regression: with 128 < N < block_n and N % 128 != 0 the old
+    ``min(block_n, N)`` tile was not a lane multiple — TPU-invalid, and
+    only passed in interpret mode.  The chosen block must always be a
+    multiple of 128 and still tile the padded vector exactly."""
+    from repro.kernels.weighted_mix import LANE, aligned_block_n
+    for n, block_n in [(200, 65536), (131, 128), (129, 4096), (300, 512),
+                       (1000, 300), (65536, 65536), (1, 128), (127, 64)]:
+        bn = aligned_block_n(n, block_n)
+        assert bn % LANE == 0, (n, block_n, bn)
+        assert bn >= LANE
+        padded = n + ((-n) % bn)
+        assert padded % bn == 0
+    # the exact regression shape: N=200 used to pick bn=200
+    assert aligned_block_n(200, 65536) == 256
 
 
 def test_weighted_mix_identity():
