@@ -19,6 +19,7 @@ Two consumers:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -278,6 +279,181 @@ def pad_schedule(sched: PermuteSchedule, slots: Sequence[int],
     return PermuteSchedule(num_clients=capacity, num_spaces=sched.num_spaces,
                            perms=tuple(perms), weights=weights,
                            self_weight=self_w)
+
+
+# --------------------------------------------------------------------------
+# Grouped layout: G local clients per device
+# --------------------------------------------------------------------------
+#
+# With ``clients_per_device = G`` the flat client axis maps onto mesh
+# devices block-contiguously: client ``i`` lives on device ``i // G`` at
+# local row ``i % G``.  A schedule slot's source permutation then splits
+# into *intra-device* edges (source on the same device — a local gather,
+# zero network bytes) and *cross-device* edges.  The cross edges of one
+# slot are NOT a device permutation in general (a device may receive
+# from up to G distinct peers per slot), and ``jax.lax.ppermute``
+# requires unique sources and destinations — so they are edge-colored
+# into at most ~G rounds, each a valid partial device permutation
+# carrying one packed model row per participating device.  Zero-weight
+# edges (self-loops at tiny n, duplicate adjacencies, dead capacity
+# slots of a padded schedule) are pruned and never touch the wire.
+
+@dataclasses.dataclass(frozen=True)
+class CrossRound:
+    """One edge-color class of a slot's cross-device edges: a partial
+    device permutation (unique sources, unique destinations) moving one
+    model row per participating device."""
+
+    pairs: Tuple[Tuple[int, int], ...]   # (src_dev, dst_dev) ppermute pairs
+    send_row: np.ndarray                 # (D,) int32: local row each source sends
+    recv_slot: np.ndarray                # (D,) int32: local row the value lands in
+    recv_on: np.ndarray                  # (D,) float32: 1 where this device receives
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedRouting:
+    """Host-static routing tables turning a flat n-client schedule into
+    a grouped (G clients per device) device program — consumed by
+    :func:`repro.dist.sync.fedlay_mix`, verified host-side by
+    :func:`grouped_mix_reference`."""
+
+    clients_per_device: int
+    num_devices: int
+    intra_src: Tuple[np.ndarray, ...]            # per slot: (D, G) int32
+    intra_on: Tuple[np.ndarray, ...]             # per slot: (D, G) float32
+    rounds: Tuple[Tuple[CrossRound, ...], ...]   # per slot
+
+    @property
+    def cross_edges(self) -> int:
+        """Cross-device (weight > 0) edges per mixing round — each costs
+        one model row on the wire."""
+        return sum(len(r.pairs) for slot in self.rounds for r in slot)
+
+    @property
+    def max_rounds(self) -> int:
+        return max((len(slot) for slot in self.rounds), default=0)
+
+
+def check_group_size(num_clients: int, clients_per_device: int) -> int:
+    """Validate the grouped-layout contract (shared by every
+    ``clients_per_device`` consumer) and return the device count
+    ``num_clients // clients_per_device``."""
+    if clients_per_device < 1:
+        raise ValueError("clients_per_device must be >= 1")
+    if num_clients % clients_per_device:
+        raise ValueError(
+            f"{num_clients} clients do not divide into groups of "
+            f"{clients_per_device}")
+    return num_clients // clients_per_device
+
+
+@functools.lru_cache(maxsize=256)
+def grouped_routing(sched: PermuteSchedule,
+                    clients_per_device: int) -> GroupedRouting:
+    """Decompose a schedule for the grouped layout (client ``i`` →
+    device ``i // G``): per slot, intra-device gather tables plus
+    greedily edge-colored cross-device ppermute rounds.  Cached by
+    schedule content (schedules hash by digest), so repeated mixer
+    compiles over the same topology reuse the tables."""
+    G = clients_per_device
+    n = sched.num_clients
+    D = check_group_size(n, G)
+    intra_src: List[np.ndarray] = []
+    intra_on: List[np.ndarray] = []
+    all_rounds: List[Tuple[CrossRound, ...]] = []
+    for k in range(sched.num_slots):
+        isrc = np.zeros((D, G), np.int32)
+        ion = np.zeros((D, G), np.float32)
+        rounds: List[dict] = []
+        for i in range(n):
+            if float(sched.weights[i, k]) <= 0.0:
+                continue    # self-loop, duplicate adjacency, or dead slot
+            src = sched.perms[k][i]
+            d, l = divmod(i, G)
+            sd, sl = divmod(src, G)
+            if sd == d:
+                isrc[d, l] = sl
+                ion[d, l] = 1.0
+                continue
+            for r in rounds:
+                if sd not in r["srcs"] and d not in r["dsts"]:
+                    break
+            else:
+                r = {"pairs": [], "srcs": set(), "dsts": set(),
+                     "send": np.zeros((D,), np.int32),
+                     "recv": np.zeros((D,), np.int32),
+                     "on": np.zeros((D,), np.float32)}
+                rounds.append(r)
+            r["pairs"].append((sd, d))
+            r["srcs"].add(sd)
+            r["dsts"].add(d)
+            r["send"][sd] = sl
+            r["recv"][d] = l
+            r["on"][d] = 1.0
+        # the routing is lru_cached and shared across compiles: freeze
+        # every array so an in-place consumer mutation fails loudly
+        # instead of poisoning future mixers for this schedule
+        for arr in (isrc, ion, *(a for r in rounds
+                                 for a in (r["send"], r["recv"], r["on"]))):
+            arr.flags.writeable = False
+        intra_src.append(isrc)
+        intra_on.append(ion)
+        all_rounds.append(tuple(
+            CrossRound(pairs=tuple(r["pairs"]), send_row=r["send"],
+                       recv_slot=r["recv"], recv_on=r["on"])
+            for r in rounds))
+    return GroupedRouting(
+        clients_per_device=G, num_devices=D,
+        intra_src=tuple(intra_src), intra_on=tuple(intra_on),
+        rounds=tuple(all_rounds))
+
+
+def grouped_mix_reference(sched: PermuteSchedule, X: np.ndarray,
+                          clients_per_device: int,
+                          mask: Optional[Sequence[float]] = None) -> np.ndarray:
+    """The grouped dense oracle: mix (n, dim) stacked models via the
+    *grouped decomposition* (intra gathers + edge-colored cross rounds)
+    in pure numpy.  Must equal ``masked_mixing_matrix(sched, mask) @ X``
+    (or ``schedule_mixing_matrix(sched) @ X`` unmasked) for every
+    schedule and G — the host-side proof that the routing tables
+    reconstruct the flat schedule before the device path is trusted."""
+    rt = grouped_routing(sched, clients_per_device)
+    G, D = rt.clients_per_device, rt.num_devices
+    Xf = np.asarray(X, np.float64)
+    local = Xf.reshape((D, G) + Xf.shape[1:])
+    m = (np.ones((sched.num_clients,)) if mask is None
+         else np.asarray(mask, np.float64)).reshape(D, G)
+
+    def receive(vals):
+        """Per slot: (D, G, ...) array of each local row's source value."""
+        out = []
+        for k in range(sched.num_slots):
+            V = np.zeros_like(vals)
+            for d in range(D):
+                for l in range(G):
+                    if rt.intra_on[k][d, l] > 0:
+                        V[d, l] = vals[d, rt.intra_src[k][d, l]]
+            for rnd in rt.rounds[k]:
+                for sd, dd in rnd.pairs:
+                    V[dd, rnd.recv_slot[dd]] = vals[sd, rnd.send_row[sd]]
+            out.append(V)
+        return out
+
+    recv_vals = receive(local)
+    recv_mask = receive(m)
+    W = sched.weights.astype(np.float64).reshape(
+        (D, G, sched.num_slots))
+    self_w = sched.self_weight.astype(np.float64).reshape(D, G)
+    eff = [W[:, :, k] * recv_mask[k] for k in range(sched.num_slots)]
+    total = self_w + sum(eff)
+    ok = (m > 0) & (total > 0)
+    safe = np.where(total > 0, total, 1.0)
+    bshape = (D, G) + (1,) * (Xf.ndim - 1)
+    acc = local * (self_w / safe).reshape(bshape)
+    for k in range(sched.num_slots):
+        acc = acc + recv_vals[k] * (eff[k] / safe).reshape(bshape)
+    acc = np.where(ok.reshape(bshape), acc, local)
+    return acc.reshape(Xf.shape)
 
 
 def masked_mixing_matrix(sched: PermuteSchedule,

@@ -13,7 +13,13 @@ One rule set, four layouts:
   ``tp`` (or cache length, under the :data:`CACHE_LEN_TP` knob).
 * **DFL client axis**: every leaf gains a leading client dim sharded
   over ``client_axis``; clients own their full replica, so FSDP is off
-  and only TP applies inside the replica.
+  and only TP applies inside the replica.  The client dim holds
+  ``num_clients = clients_per_device · num_devices`` rows
+  (:func:`dfl_client_count`): with G > 1 each device hosts a
+  block-contiguous group of G clients (client ``i`` → device ``i // G``
+  — the grouped layout of :mod:`repro.dist.sync`), which is exactly
+  what GSPMD produces for a size-``G·D`` dim sharded over a size-``D``
+  axis.
 
 ``enforce_divisibility`` drops any axis whose size does not divide the
 corresponding dim — GSPMD would otherwise pad-and-mask, which is never
@@ -112,6 +118,23 @@ def param_specs(params, fsdp: Optional[str] = None, tp: Optional[str] = None,
         return P(*([None] * pad), *base)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def dfl_client_count(mesh, clients_per_device: int = 1) -> int:
+    """Total DFL clients a mesh hosts: ``G ·  Π(non-model axis sizes)``.
+
+    The client axis of every DFL bundle is sized by this rule, so the
+    grouped layout stays consistent across the param/batch/mask specs:
+    GSPMD shards the leading ``G·D`` client dim over the ``D`` data
+    devices into exactly the block-contiguous groups
+    :func:`repro.dist.sync.fedlay_mix` assumes."""
+    if clients_per_device < 1:
+        raise ValueError("clients_per_device must be >= 1")
+    n = clients_per_device
+    for a in mesh.axis_names:
+        if a != "model":
+            n *= mesh.shape[a]
+    return n
 
 
 def enforce_divisibility(specs, shapes, axis_sizes: Mapping[str, int]):

@@ -12,17 +12,35 @@ programs built here between training steps under churn.  This module
 turns a schedule into device programs two ways:
 
 * :func:`fedlay_mix` / :func:`make_mixer` — the explicit ``shard_map``
-  path: one ``jax.lax.ppermute`` per (space × direction) slot, each
-  device holding one client's replica on the client axis.  Verified
-  equal to the dense ``schedule_mixing_matrix`` product in
-  ``tests/test_dist.py``.
+  path: with the 1:1 layout (one client per device) one
+  ``jax.lax.ppermute`` per (space × direction) slot; with the **grouped
+  layout** (``clients_per_device = G > 1``) each device holds G
+  clients' replicas as a leading local-client dim, intra-device edges
+  become local gathers (zero network bytes), and cross-device edges run
+  as the edge-colored batched ppermute rounds of
+  :func:`repro.core.mixing.grouped_routing`.  Verified equal to the
+  dense ``schedule_mixing_matrix`` / ``masked_mixing_matrix`` products
+  in ``tests/test_dist.py`` and ``tests/test_grouped.py``.
 * :func:`global_mixer` — the global-view (auto-sharded jit) path used by
   ``repro.launch.steps.dfl_train_bundle``: permutation gathers along the
   leading client axis, which GSPMD lowers to collective-permutes when
-  that axis is client-sharded.
+  that axis is client-sharded.  Layout-agnostic: with ``num_clients =
+  G · num_devices`` rows client-sharded over the mesh, GSPMD routes
+  on-device rows locally for free.
+
+**The grouped ``(G, ...)`` contract** (shard_map path): the client axis
+maps onto devices block-contiguously — client ``i`` lives on device
+``i // G`` at local row ``i % G``; every tree leaf carries a leading
+local-client dim of size G, ``weights`` is the local (G, 2L) slice of
+the schedule's weight table and ``self_weight`` the local (G,) slice
+(i.e. the (n, 2L)/(n,) host tables sharded over the client axis), and
+``mask`` — when given — the local (G,) slice of the (n,) participation
+mask.  ``G == 1`` degenerates to the original one-ppermute-per-slot
+program.
 
 Plus :func:`sync_bytes_per_client`, the paper's per-round communication
-accounting (§IV-D / Fig. 20) shared by the scalability benchmarks.
+accounting (§IV-D / Fig. 20) shared by the scalability benchmarks —
+grouped mixing pays network bytes only for cross-device edges.
 """
 
 from __future__ import annotations
@@ -33,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.mixing import PermuteSchedule
+from ..core.mixing import PermuteSchedule, check_group_size, grouped_routing
 
 #: Sync strategies understood by both mixer factories.
 SYNC_STRATEGIES = ("fedlay", "allreduce", "ring", "none")
@@ -67,29 +85,71 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
                mask: Optional[jnp.ndarray] = None):
     """One FedLay mixing round inside ``shard_map``.
 
-    ``tree`` leaves carry a leading local-client dim (size 1 when the
-    client axis maps 1:1 onto ``axis_name`` devices, which is the only
-    supported layout); ``weights`` is the local (1, 2L) confidence-weight
-    slice and ``self_weight`` the local (1,) self weight.  Equivalent to
-    the dense ``W @ X`` of ``schedule_mixing_matrix(sched)``.
+    ``tree`` leaves carry a leading local-client dim of size G (the
+    module-level grouped ``(G, ...)`` contract: client ``i`` lives on
+    device ``i // G``, so ``sched.num_clients == G · axis_size``);
+    ``weights`` is the local (G, 2L) confidence-weight slice and
+    ``self_weight`` the local (G,) self weight.  Equivalent to the dense
+    ``W @ X`` of ``schedule_mixing_matrix(sched)``.
 
-    ``mask`` (optional, local (c,) 0/1 float) makes the round mask-aware:
+    With ``G == 1`` (the original 1:1 layout) each slot is one
+    ``ppermute`` of the full local replica.  With ``G > 1`` edges whose
+    source lives on the same device are local gathers (zero network
+    bytes) and cross-device edges run as the edge-colored ppermute
+    rounds of :func:`repro.core.mixing.grouped_routing` — at most ~G
+    batched single-row permutes per slot, moving exactly the weight>0
+    cross edges.
+
+    ``mask`` (optional, local (G,) 0/1 float) makes the round mask-aware:
     a masked-out client (dead capacity slot, or a slow client skipping
     this collective under multirate participation) keeps its own model,
     and live clients drop its contribution and renormalize over the
     surviving weights — the per-device image of
     :func:`repro.core.mixing.masked_mixing_matrix`.  The mask rides the
-    same ppermutes as the models, so masking adds 2L scalar permutes,
-    not a retrace.
+    same routing as the models, so masking adds scalar permutes, not a
+    retrace.
     """
+    G = jax.tree.leaves(tree)[0].shape[0]
+    # psum of a literal is evaluated statically under shard_map tracing,
+    # so a schedule/mesh layout mismatch fails loudly at trace time
+    # instead of silently mixing zeros on the surplus devices.
+    axis_size = jax.lax.psum(1, axis_name)
+    if isinstance(axis_size, int) and sched.num_clients != G * axis_size:
+        raise ValueError(
+            f"schedule is for {sched.num_clients} clients but the "
+            f"grouped layout holds {G} × {axis_size} devices on axis "
+            f"{axis_name!r}")
     masked = mask is not None
+
+    if G == 1:
+        # 1:1 layout: one full-replica ppermute per slot (the original
+        # program; grouped routing degenerates to this anyway, but the
+        # direct form keeps existing compiled programs byte-stable).
+        def receive(x, k):
+            return jax.lax.ppermute(x, axis_name,
+                                    perm=sched.ppermute_pairs(k))
+    else:
+        rt = grouped_routing(sched, G)
+        i = jax.lax.axis_index(axis_name)
+
+        def receive(x, k):
+            isrc = jnp.asarray(rt.intra_src[k])[i]          # (G,)
+            ion = jnp.asarray(rt.intra_on[k])[i]            # (G,)
+            shape = (G,) + (1,) * (x.ndim - 1)
+            recv = jnp.take(x, isrc, axis=0) * ion.reshape(shape).astype(
+                x.dtype)
+            for rnd in rt.rounds[k]:
+                row = jnp.take(x, jnp.asarray(rnd.send_row)[i], axis=0)
+                got = jax.lax.ppermute(row, axis_name,
+                                       perm=list(rnd.pairs))
+                on = jnp.asarray(rnd.recv_on)[i].astype(x.dtype)
+                recv = recv.at[jnp.asarray(rnd.recv_slot)[i]].add(got * on)
+            return recv
+
     if masked:
         m = mask.astype(jnp.float32)
-        eff = []
-        for k in range(sched.num_slots):
-            src_m = jax.lax.ppermute(m, axis_name,
-                                     perm=sched.ppermute_pairs(k))
-            eff.append(weights[:, k].astype(jnp.float32) * src_m)
+        eff = [weights[:, k].astype(jnp.float32) * receive(m, k)
+               for k in range(sched.num_slots)]
         total = self_weight.astype(jnp.float32) + sum(eff)
         ok = (m > 0) & (total > 0)
         safe = jnp.where(total > 0, total, 1.0)
@@ -100,12 +160,10 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
         slot_w = [weights[:, k] for k in range(sched.num_slots)]
 
     def mix_leaf(leaf):
-        c = leaf.shape[0]
-        shape = (c,) + (1,) * (leaf.ndim - 1)
+        shape = (G,) + (1,) * (leaf.ndim - 1)
         acc = leaf * self_w.reshape(shape).astype(leaf.dtype)
         for k in range(sched.num_slots):
-            recv = jax.lax.ppermute(leaf, axis_name,
-                                    perm=sched.ppermute_pairs(k))
+            recv = receive(leaf, k)
             w = slot_w[k].reshape(shape).astype(leaf.dtype)
             acc = acc + recv * w
         if masked:
@@ -116,16 +174,27 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
 
 
 def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
-               axis_name: str, num_clients: int) -> Callable:
+               axis_name: str, num_clients: int,
+               clients_per_device: int = 1) -> Callable:
     """Build a ``shard_map``-body mixer ``(tree, weights, self_w) -> tree``
     for one sync strategy over the client axis ``axis_name``.
 
-    * ``fedlay``   — 2L static ppermutes from ``sched`` (paper §III);
-    * ``allreduce``— uniform mean over all clients (centralized image);
+    ``num_clients`` is the **total** client count; with
+    ``clients_per_device = G > 1`` the mesh axis holds ``num_clients / G``
+    devices and tree leaves carry the grouped leading (G, ...) dim (the
+    module-level contract).
+
+    * ``fedlay``   — static ppermutes from ``sched`` (paper §III); with
+      G > 1, intra-device sub-mixing + edge-colored cross-device rounds;
+    * ``allreduce``— uniform mean over all clients (centralized image;
+      local G-row mean, then ``pmean`` over devices);
     * ``ring``     — identity-ring neighbor average (ignores ``sched``'s
-      weights; uses its own uniform ring schedule);
+      weights; uses its own uniform ring schedule over all clients);
     * ``none``     — isolated local training.
     """
+    G = clients_per_device
+    check_group_size(num_clients, G)
+
     if strategy == "none":
         return lambda tree, weights, self_w: tree
 
@@ -145,8 +214,9 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
 
         def ring_mixer(tree, weights, self_w):
             i = jax.lax.axis_index(axis_name)
-            return fedlay_mix(tree, ring, ring_w[i][None], ring_s[i][None],
-                              axis_name)
+            w = jax.lax.dynamic_slice_in_dim(ring_w, i * G, G, axis=0)
+            s = jax.lax.dynamic_slice_in_dim(ring_s, i * G, G, axis=0)
+            return fedlay_mix(tree, ring, w, s, axis_name)
         return ring_mixer
 
     if strategy == "fedlay":
@@ -155,7 +225,8 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
         if sched.num_clients != num_clients:
             raise ValueError(
                 f"schedule is for {sched.num_clients} clients, "
-                f"mesh axis {axis_name!r} has {num_clients}")
+                f"mesh axis {axis_name!r} holds {num_clients} "
+                f"(= {num_clients // G} devices × {G})")
         return lambda tree, weights, self_w: fedlay_mix(
             tree, sched, weights, self_w, axis_name)
 
@@ -165,7 +236,8 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
 
 def global_mixer(strategy: str,
                  sched: Optional[PermuteSchedule] = None,
-                 masked: bool = False) -> Callable:
+                 masked: bool = False,
+                 clients_per_device: int = 1) -> Callable:
     """Build a global-view mixer ``params -> params`` over the leading
     client axis (for auto-sharded jit, e.g. ``dfl_train_bundle``).
 
@@ -173,6 +245,13 @@ def global_mixer(strategy: str,
     ``params[perm_k]`` along the client dim — GSPMD lowers it to a
     collective-permute when that dim is client-sharded, i.e. exactly the
     neighbor exchange :func:`fedlay_mix` spells out by hand.
+
+    The global view is grouped-layout agnostic: the program operates on
+    all ``sched.num_clients`` rows and GSPMD routes whatever fraction of
+    each permutation stays on-device for free, so ``clients_per_device``
+    is validation-only here — it asserts the client count divides into
+    groups of G (``num_clients = G · num_devices``) so the caller's
+    client-sharded leading axis actually lands G rows per device.
 
     With ``masked=True`` the returned callable is ``(params, mask) ->
     params`` where ``mask`` is a (C,) 0/1 float *runtime input* (no
@@ -182,6 +261,10 @@ def global_mixer(strategy: str,
     the fixed-capacity slot runtime (dead slots) and multirate
     participation (slow clients skipping a collective) both plug into.
     """
+    if sched is not None:
+        check_group_size(sched.num_clients, clients_per_device)
+    elif clients_per_device < 1:
+        raise ValueError("clients_per_device must be >= 1")
     if strategy == "none":
         if masked:
             return lambda params, mask: params
@@ -255,28 +338,42 @@ def global_mixer(strategy: str,
 
 
 def sync_bytes_per_client(strategy: str, model_bytes: int, num_clients: int,
-                          num_spaces: Optional[int] = None) -> float:
-    """Bytes each client sends per mixing round (paper §IV-D accounting).
+                          num_spaces: Optional[int] = None,
+                          clients_per_device: int = 1) -> float:
+    """*Network* bytes each client sends per mixing round (paper §IV-D
+    accounting).  With the grouped layout (``clients_per_device = G``)
+    edges between clients co-hosted on one device cost 0 network bytes,
+    so every strategy's wire cost shrinks — to exactly 0 when the whole
+    population shares one device.
 
-    * ``fedlay``: degree ≤ 2L ⇒ at most ``2L · model_bytes`` — constant
-      in n, the paper's headline scalability claim;
-    * ``ring``: two neighbors;
-    * ``complete``: all n−1 peers (the dense-DFL strawman);
-    * ``allreduce``: bandwidth-optimal ring all-reduce,
-      ``2·(n−1)/n · model_bytes``;
+    * ``fedlay``: degree ≤ 2L, each ring neighbor uniform over the other
+      n−1 clients ⇒ expected ``2L · (n−G)/(n−1) · model_bytes`` — the
+      G=1 case is the paper's constant-in-n headline ``2L·model_bytes``
+      (exact per-schedule counts:
+      :attr:`repro.core.mixing.GroupedRouting.cross_edges`);
+    * ``ring``: two neighbors; block-contiguous grouping makes the
+      identity ring device-contiguous, so only ``2·D`` of the ``2n``
+      messages cross devices ⇒ ``2/G · model_bytes`` per client;
+    * ``complete``: all n−1 peers, n−G of them remote;
+    * ``allreduce``: device-local reduce first (free), then a
+      bandwidth-optimal ring all-reduce over the D devices, amortized
+      over the G clients per device: ``2·(D−1)/D / G · model_bytes``;
     * ``none``: no communication.
     """
-    n = num_clients
+    n, G = num_clients, clients_per_device
+    D = check_group_size(n, G)
     if strategy == "fedlay":
         if num_spaces is None:
             raise ValueError("fedlay accounting needs num_spaces")
-        return 2.0 * num_spaces * model_bytes
+        if D == 1:
+            return 0.0
+        return 2.0 * num_spaces * model_bytes * (n - G) / (n - 1)
     if strategy == "ring":
-        return 2.0 * model_bytes
+        return 0.0 if D == 1 else 2.0 * model_bytes / G
     if strategy == "complete":
-        return float(n - 1) * model_bytes
+        return float(n - G) * model_bytes
     if strategy in ("allreduce", "fedavg"):
-        return 2.0 * (n - 1) / n * model_bytes
+        return 2.0 * (D - 1) / D * model_bytes / G
     if strategy == "none":
         return 0.0
     raise ValueError(

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.mixing import PermuteSchedule
-from ..dist.sharding import (batch_spec, cache_specs, enforce_divisibility,
-                             param_specs)
+from ..dist.sharding import (batch_spec, cache_specs, dfl_client_count,
+                             enforce_divisibility, param_specs)
 from ..dist.sync import SYNC_STRATEGIES, global_mixer, ring_schedule
 from ..models import decode_step, init_cache, init_params, train_loss
 from ..models.config import ArchConfig, InputShape
@@ -213,7 +213,8 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      sync: str = "fedlay", num_spaces: int = 3,
                      remat: bool = True,
                      sched: Optional[PermuteSchedule] = None,
-                     masked: bool = False) -> StepBundle:
+                     masked: bool = False,
+                     clients_per_device: int = 1) -> StepBundle:
     """``sched`` overrides the internally built overlay schedule, e.g.
     to bake an :class:`repro.overlay.OverlayController`'s converged NDMP
     schedule into a static bundle; when None the static overlay over
@@ -230,7 +231,14 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     drops masked-out sources and renormalizes
     (:func:`repro.dist.sync.global_mixer` ``masked`` path), and the
     reported loss is the masked mean over live slots.  The mask is a
-    runtime input, so it changes every step with zero retrace."""
+    runtime input, so it changes every step with zero retrace.
+
+    ``clients_per_device`` (G) sizes the client axis at
+    ``C = G · num_devices`` (:func:`repro.dist.sharding.dfl_client_count`)
+    — the grouped layout: each data-axis device hosts a block-contiguous
+    group of G clients, so a simulation (or a capacity-mode slot runtime
+    with ``capacity = C``) is no longer capped at the device count.
+    GSPMD keeps intra-group mixing edges on-device for free."""
     from ..core.mixing import build_permute_schedule
     from ..data.tokens import input_specs as data_specs
     if sync not in SYNC_STRATEGIES:
@@ -238,9 +246,11 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
             f"unknown sync strategy {sync!r}; choose from {SYNC_STRATEGIES}")
     dp = tuple(a for a in mesh.axis_names if a != "model")
     client_axis = dp if len(dp) > 1 else dp[0]
-    C = 1
-    for a in dp:
-        C *= mesh.shape[a]
+    C = dfl_client_count(mesh, clients_per_device)
+    if shape.global_batch % C:
+        raise ValueError(
+            f"global batch {shape.global_batch} does not divide over "
+            f"{C} clients ({clients_per_device} per device)")
     # multi-pod: bias 2 of the L ring spaces pod-local (the §Perf Pareto
     # point) so most mixing volume stays on intra-pod links
     pods = mesh.shape.get("pod")
@@ -260,7 +270,8 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
             else None)
     elif sync == "ring":
         sched = ring_schedule(C)
-    mix = global_mixer(sync, sched, masked=masked)
+    mix = global_mixer(sync, sched, masked=masked,
+                       clients_per_device=clients_per_device)
 
     params_shape = jax.eval_shape(
         lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))

@@ -1,10 +1,12 @@
 """End-to-end DFL training driver — the paper's system on the TPU path.
 
-Every position of the mesh's client axis hosts one FedLay client: a full
-model replica training on its own non-iid token shard.  After every
-local step the clients mix models over the FedLay overlay — 2L
-``ppermute`` rotations with MEP confidence weights inside ``shard_map``
-— or with the selectable baselines (``allreduce`` = centralized FedAvg
+Each device of the mesh's client axis hosts ``--clients-per-device``
+FedLay clients (default 1): full model replicas training on their own
+non-iid token shards, stacked on a leading local-client dim.  After
+every local step the clients mix models over the FedLay overlay —
+grouped ``ppermute`` rotations with MEP confidence weights inside
+``shard_map``; with G > 1 intra-device edges never touch the wire — or
+with the selectable baselines (``allreduce`` = centralized FedAvg
 aggregation, ``ring``, ``none`` = isolated local training).
 
 Runs on real multi-device meshes and on CPU via host-platform devices:
@@ -12,6 +14,11 @@ Runs on real multi-device meshes and on CPU via host-platform devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train --clients 8 --steps 200 \
       --sync fedlay --spaces 3
+
+  # 16 clients on 8 devices (2 per device):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --clients 16 \
+      --clients-per-device 2 --steps 200
 """
 
 from __future__ import annotations
@@ -46,25 +53,21 @@ def tiny_lm(vocab: int = 512, d_model: int = 128, layers: int = 4) -> ArchConfig
 
 def make_dfl_step(cfg: ArchConfig, optimizer, mixer, mesh: Mesh,
                   axis: str = "data"):
-    """One DFL round: local grad step on each client, then overlay mix."""
+    """One DFL round: local grad step on each client, then overlay mix.
+    The leading local-client dim inside shard_map is G (= 1 for the
+    flat layout), so the local step vmaps over it."""
 
-    def local(params_l, opt_l, batch_l):
-        # leading local-client dim is 1 inside shard_map
-        p = jax.tree.map(lambda x: x[0], params_l)
-        o = jax.tree.map(lambda x: x[0], opt_l)
-        b = jax.tree.map(lambda x: x[0], batch_l)
+    def one(p, o, b):
         loss, grads = jax.value_and_grad(
             lambda q: train_loss(cfg, q, b, remat=False))(p)
         grads, _ = clip_by_global_norm(grads, 1.0)
         updates, o = optimizer.update(grads, o, p)
-        p = apply_updates(p, updates)
-        return (jax.tree.map(lambda x: x[None], p),
-                jax.tree.map(lambda x: x[None], o), loss)
+        return apply_updates(p, updates), o, loss
 
     def body(params_l, opt_l, batch_l, w_l, sw_l):
-        params_l, opt_l, loss = local(params_l, opt_l, batch_l)
+        params_l, opt_l, loss = jax.vmap(one)(params_l, opt_l, batch_l)
         mixed = mixer(params_l, w_l, sw_l)
-        mean_loss = jax.lax.pmean(loss, axis)
+        mean_loss = jax.lax.pmean(jnp.mean(loss), axis)
         return mixed, opt_l, mean_loss
 
     spec_c = P(axis)       # leading client dim
@@ -77,8 +80,11 @@ def make_dfl_step(cfg: ArchConfig, optimizer, mixer, mesh: Mesh,
 
 
 def run(args) -> Dict:
-    mesh = make_client_mesh(args.clients, "data")
-    n = args.clients
+    n, G = args.clients, args.clients_per_device
+    if n % G:
+        raise SystemExit(f"--clients {n} must be a multiple of "
+                         f"--clients-per-device {G}")
+    mesh = make_client_mesh(n // G, "data")
     cfg = tiny_lm(vocab=args.vocab, d_model=args.d_model, layers=args.layers)
 
     # per-client params (same init — standard DFL assumption) + opt state
@@ -96,7 +102,7 @@ def run(args) -> Dict:
     # FedLay overlay over client ids 0..n-1, compiled to the ppermute
     # schedule (MEP confidence weights from the per-client data skew)
     sched = build_permute_schedule(n, args.spaces)
-    mixer = make_mixer(args.sync, sched, "data", n)
+    mixer = make_mixer(args.sync, sched, "data", n, clients_per_device=G)
     weights = jax.device_put(jnp.asarray(sched.weights), shard_c)
     self_w = jax.device_put(jnp.asarray(sched.self_weight), shard_c)
 
@@ -118,7 +124,8 @@ def run(args) -> Dict:
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d}  loss {losses[-1]:.4f}  "
                   f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
-    result = {"sync": args.sync, "clients": n, "steps": args.steps,
+    result = {"sync": args.sync, "clients": n, "clients_per_device": G,
+              "steps": args.steps,
               "first_loss": losses[0], "final_loss": losses[-1],
               "losses": losses}
     if args.out:
@@ -130,6 +137,9 @@ def run(args) -> Dict:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", type=int, default=len(jax.devices()))
+    ap.add_argument("--clients-per-device", type=int, default=1,
+                    help="G local clients per mesh device "
+                         "(total clients = G × devices)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--sync", default="fedlay",
                     choices=["fedlay", "allreduce", "ring", "none"])

@@ -26,6 +26,17 @@ Two mixer kinds, matching the two device paths in
   body for callers that embed mixing in an explicit shard_map program.
   The cached callable has stable identity per schedule, so the caller's
   enclosing ``jax.jit`` also avoids retracing on cache hits.
+
+**Grouped layout** (``clients_per_device = G > 1``): the client
+population is ``G ×`` the device count, laid out block-contiguously
+(client slot ``i`` → device ``i // G``, the ``(G, ...)`` per-device
+contract of :mod:`repro.dist.sync`).  The group factor threads through
+every layer the controller owns: shard_map mixer factories build
+grouped programs, capacity mode requires ``capacity % G == 0`` so
+padded schedules always map onto whole device groups, and the
+:class:`MixerCache` needs no G in its keys — G is fixed per controller,
+so the schedule digest alone still uniquely identifies a compiled
+program.
 """
 
 from __future__ import annotations
@@ -102,11 +113,13 @@ def _global_mixer_factory(strategy: str = "fedlay", masked: bool = False):
     return build
 
 
-def _shard_map_mixer_factory(axis_name: str, strategy: str = "fedlay"):
+def _shard_map_mixer_factory(axis_name: str, strategy: str = "fedlay",
+                             clients_per_device: int = 1):
     from ..dist.sync import make_mixer
 
     def build(sched: PermuteSchedule) -> Callable:
-        return make_mixer(strategy, sched, axis_name, sched.num_clients)
+        return make_mixer(strategy, sched, axis_name, sched.num_clients,
+                          clients_per_device=clients_per_device)
     return build
 
 
@@ -165,13 +178,22 @@ class OverlayController:
                  cache_size: int = 64,
                  measure_correctness: bool = False,
                  capacity: Optional[int] = None,
-                 double_buffered: bool = False):
+                 double_buffered: bool = False,
+                 clients_per_device: int = 1):
         """``capacity`` switches the controller into fixed-capacity slot
         mode (:mod:`repro.runtime`): it owns a
         :class:`~repro.runtime.slots.SlotMap`, pads every rebuilt
         schedule to ``capacity`` (dead slots self-loop with weight 1),
         and compiles **mask-aware** mixers ``(params, mask) -> params``
         so the data-plane shapes never change under churn.
+
+        ``clients_per_device`` (G) declares the grouped data-plane
+        layout: client slot ``i`` lives on device ``i // G``.  shard_map
+        mixer factories compile grouped programs for it, and capacity
+        mode requires ``capacity`` to be a multiple of G so the padded
+        schedule always fills whole device groups (capacity = G × the
+        mesh's client-axis size is the intended deployment,
+        e.g. via :class:`repro.runtime.SlotTrainLoop`'s ``mesh=``).
 
         ``double_buffered`` defers the hot swap to the step boundary:
         ``step()`` stages the rebuilt schedule + compiled mixer (and, in
@@ -192,6 +214,13 @@ class OverlayController:
         self.measure_correctness = measure_correctness
         self.capacity = capacity
         self.double_buffered = double_buffered
+        if clients_per_device < 1:
+            raise ValueError("clients_per_device must be >= 1")
+        if capacity is not None and capacity % clients_per_device:
+            raise ValueError(
+                f"capacity {capacity} is not a multiple of "
+                f"clients_per_device {clients_per_device}")
+        self.clients_per_device = clients_per_device
         self.slots = None
         if capacity is not None:
             if mixer_kind != "global" and mixer_factory is None:
@@ -204,7 +233,8 @@ class OverlayController:
             mixer_factory = (_global_mixer_factory(
                 strategy, masked=capacity is not None)
                 if mixer_kind == "global"
-                else _shard_map_mixer_factory(axis_name, strategy))
+                else _shard_map_mixer_factory(axis_name, strategy,
+                                              clients_per_device))
         self.cache = MixerCache(mixer_factory, maxsize=cache_size)
         self.rebuilds = 0
         self.swaps = 0

@@ -97,6 +97,18 @@ class SlotTrainLoop:
     0)``; the local-step mask stays pure aliveness (slow clients keep
     training locally, per the paper's asynchrony model).
 
+    ``mesh`` (optional) places the capacity axis on a real device mesh:
+    every capacity-stacked row tree (params, optimizer state, batches,
+    masks) is sharded over ``client_axis``, so with ``capacity = G ×
+    devices`` each device hosts a block-contiguous group of G client
+    slots — the grouped layout of :mod:`repro.dist.sync` — and the
+    controller must declare the same factor
+    (``OverlayController(clients_per_device=G)``).  After each step the
+    loop re-pins params/opt state to that canonical row sharding, so
+    the jitted local step sees identical shardings every step and the
+    zero-retrace guarantee survives whatever layout GSPMD picks for the
+    mixer output.
+
     The step counter persists across :meth:`run` calls, so churn traces
     and participation phases stay consistent when driven incrementally.
     """
@@ -108,7 +120,8 @@ class SlotTrainLoop:
                  make_batch: Callable[[Sequence[int], int], object],
                  periods: Optional[Dict[int, float]] = None,
                  step_time: float = 1.0,
-                 jit_local_step: bool = True):
+                 jit_local_step: bool = True,
+                 mesh=None, client_axis: str = "data"):
         import jax
 
         if controller.slots is None:
@@ -117,6 +130,16 @@ class SlotTrainLoop:
                 "(OverlayController(..., capacity=C))")
         self.controller = controller
         self.capacity = controller.capacity
+        self.mesh = mesh
+        self.client_axis = client_axis
+        if mesh is not None:
+            devices = mesh.shape[client_axis]
+            expect = controller.clients_per_device * devices
+            if self.capacity != expect:
+                raise ValueError(
+                    f"capacity {self.capacity} != clients_per_device "
+                    f"{controller.clients_per_device} × {devices} "
+                    f"devices on axis {client_axis!r}")
         self.optimizer = optimizer
         self.make_params = make_params
         self.make_batch = make_batch
@@ -143,14 +166,31 @@ class SlotTrainLoop:
             raise ValueError("controller has no live nodes")
         dead = jax.tree.map(lambda l: jax.numpy.zeros_like(l), template)
         rows = [r if r is not None else dead for r in rows]
-        self.params = self._stack(rows)
-        self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self.params = self._shard_rows(self._stack(rows))
+        self.opt_state = self._shard_rows(
+            jax.vmap(optimizer.init)(self.params))
         self.records: List[SlotStepRecord] = []
 
     # ---- state surgery ---------------------------------------------------
     def _stack(self, trees):
         jnp = self._jax.numpy
         return self._jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+    def _shard_rows(self, tree):
+        """Pin capacity-stacked leaves to the canonical row sharding
+        over ``mesh``'s client axis (no-op without a mesh; leaves
+        without the leading capacity dim are replicated)."""
+        if self.mesh is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def put(l):
+            if getattr(l, "ndim", 0) >= 1 and l.shape[0] == self.capacity:
+                spec = P(self.client_axis, *([None] * (l.ndim - 1)))
+            else:
+                spec = P()
+            return self._jax.device_put(l, NamedSharding(self.mesh, spec))
+        return self._jax.tree.map(put, tree)
 
     def _row(self, tree, i: int):
         return self._jax.tree.map(lambda l: l[i], tree)
@@ -184,6 +224,9 @@ class SlotTrainLoop:
             self.opt_state = self._jax.tree.map(
                 lambda l, r: l.at[slot].set(r.astype(l.dtype)),
                 self.opt_state, self.optimizer.init(row))
+        if joiners:
+            self.params = self._shard_rows(self.params)
+            self.opt_state = self._shard_rows(self.opt_state)
         return joiners, tuple(u for u, _ in plan.leavers)
 
     # ---- per-step masks and batches --------------------------------------
@@ -229,15 +272,16 @@ class SlotTrainLoop:
                 joined, left = self._apply_plan(plan)
             alive = ctl.alive
             alive_mask = ctl.alive_mask()
-            mask = jnp.asarray(alive_mask)
-            mix_mask = jnp.asarray(self._mix_mask(alive, alive_mask, step))
-            batch = self._capacity_batch(alive, step)
+            mask = self._shard_rows(jnp.asarray(alive_mask))
+            mix_mask = self._shard_rows(
+                jnp.asarray(self._mix_mask(alive, alive_mask, step)))
+            batch = self._shard_rows(self._capacity_batch(alive, step))
             params, opt_state, metrics = self.local_step(
                 self.params, self.opt_state, batch, mask)
             # the hot-swap seam: the controller's mask-aware mixer; slow
             # or dead slots pass through untouched
-            self.params = ctl.mixer(params, mix_mask)
-            self.opt_state = opt_state
+            self.params = self._shard_rows(ctl.mixer(params, mix_mask))
+            self.opt_state = self._shard_rows(opt_state)
             self.records.append(SlotStepRecord(
                 step=step, time=report.time, num_alive=len(alive),
                 participating=int(np.asarray(mix_mask).sum()),

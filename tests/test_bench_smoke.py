@@ -1,7 +1,8 @@
 """Benchmark-harness smoke: the quick-mode front door must exit 0 so
 benchmark-breaking API changes fail tier-1 instead of silently rotting
 (fig3 exercises the topology-metrics path, churn_swap the overlay
-control plane, slot_runtime the fixed-capacity runtime — all
+control plane, slot_runtime the fixed-capacity runtime, and
+sync_collectives the grouped clients-per-device HLO accounting — all
 seconds-fast in quick mode)."""
 
 import json
@@ -17,6 +18,10 @@ def _run(*args):
     src = os.path.join(REPO, "src")
     env["PYTHONPATH"] = src + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # don't leak the conftest-forced 8-device flag: benchmarks must run
+    # under the same device config here as in CI / standalone, or the
+    # accumulated BENCH_<name>.json perf rows are not comparable
+    env.pop("XLA_FLAGS", None)
     return subprocess.run(
         [sys.executable, "-m", "benchmarks.run", *args],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
@@ -49,3 +54,26 @@ def test_benchmarks_quick_churn_and_slot_runtime_json():
     assert by_loop["slot"]["distinct_alive"] >= 3
     assert by_loop["restack"]["retraces"] >= by_loop["restack"][
         "distinct_alive"] - 1
+
+
+def test_benchmarks_quick_sync_collectives_grouped_json():
+    """The grouped clients-per-device axis through the --json path:
+    rows for G = 1 and G > 1, with the G > 1 fedlay schedule provably
+    cheaper on the wire than the flat-layout paper bound."""
+    res = _run("--only", "sync_collectives", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    path = os.path.join(REPO, "BENCH_sync_collectives.json")
+    assert os.path.exists(path)
+    with open(path) as f:
+        data = json.load(f)
+    assert not data["failed"] and data["rows"]
+    fedlay = {r["clients_per_device"]: r for r in data["rows"]
+              if r.get("strategy") == "fedlay"}
+    assert 1 in fedlay and any(g > 1 for g in fedlay)
+    for g, row in fedlay.items():
+        assert row["clients"] == 8 * g
+        assert row["wire_mb_per_dev"] > 0
+        bound = 2 * 3 * row["model_mb"]          # flat 2L·model bytes
+        assert row["exact_mb_per_client"] <= bound + 1e-6
+        if g > 1:
+            assert row["exact_mb_per_client"] < bound

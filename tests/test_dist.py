@@ -1,21 +1,15 @@
 """Distribution layer: sharding rules, divisibility enforcement, and the
-FedLay ppermute mixer — verified against the dense mixing matrix on an
-8-device host mesh (subprocess, so this test module's jax stays 1-dev)."""
-
-import json
-import os
-import subprocess
-import sys
-import textwrap
+FedLay ppermute mixer — verified against the dense mixing matrix on the
+8-device host mesh tier-1 runs on (forced by ``tests/conftest.py``)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.dist.sharding import (enforce_divisibility, param_specs,
-                                 spec_for_leaf)
+from repro.dist.sharding import (dfl_client_count, enforce_divisibility,
+                                 param_specs, spec_for_leaf)
 from repro.dist.sync import sync_bytes_per_client
 from repro.models import init_params
 from repro.models.config import ArchConfig, MoEConfig
@@ -77,13 +71,12 @@ def test_sync_bytes_model():
         sync_bytes_per_client("complete", mb, 100)
 
 
-_SUBPROC = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import json, sys
-    import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core.mixing import build_permute_schedule, schedule_mixing_matrix
+@pytest.mark.multi_device
+def test_fedlay_ppermute_equals_dense_matrix(multi_device):
+    """TPU-path mixing (shard_map + 2L ppermutes) ≡ W·X on 8 devices —
+    inline on the tier-1 forced host mesh (used to be a subprocess)."""
+    from repro.core.mixing import (build_permute_schedule,
+                                   schedule_mixing_matrix)
     from repro.dist.compat import make_client_mesh, shard_map
     from repro.dist.sync import make_mixer
 
@@ -105,23 +98,20 @@ _SUBPROC = textwrap.dedent("""
     shard = NamedSharding(mesh, P("data"))
     out = f(jax.device_put(X, shard), jax.device_put(W, shard),
             jax.device_put(S, shard))
-    Wm = schedule_mixing_matrix(sched)
-    ref = Wm @ np.asarray(X)
-    err = float(np.abs(np.asarray(out) - ref).max())
-    print(json.dumps({"err": err}))
-""")
+    ref = schedule_mixing_matrix(sched) @ np.asarray(X)
+    assert float(np.abs(np.asarray(out) - ref).max()) < 1e-5
 
 
-def test_fedlay_ppermute_equals_dense_matrix():
-    """TPU-path mixing (shard_map + 2L ppermutes) ≡ W·X on 8 devices."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("XLA_FLAGS", None)
-    res = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
-                         capture_output=True, text=True, timeout=300)
-    assert res.returncode == 0, res.stderr[-2000:]
-    err = json.loads(res.stdout.strip().splitlines()[-1])["err"]
-    assert err < 1e-5
+def test_dfl_client_count_grouped():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(1, 1)
+    assert dfl_client_count(mesh) == 1
+    assert dfl_client_count(mesh, clients_per_device=4) == 4
+    from repro.dist.compat import make_client_mesh
+    mesh8 = make_client_mesh(8, "data")
+    assert dfl_client_count(mesh8, clients_per_device=2) == 16
+    with pytest.raises(ValueError, match=">= 1"):
+        dfl_client_count(mesh8, clients_per_device=0)
 
 
 def test_bundles_build_without_devices():

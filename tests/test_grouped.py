@@ -1,0 +1,366 @@
+"""Grouped multi-client-per-device mixing (ISSUE 4).
+
+The grouped layout maps ``num_clients = G · num_devices`` onto the mesh
+block-contiguously (client i → device i // G).  These tests pin the
+whole chain on a **real 8-device CPU mesh** (the tier-1 forced host
+platform, see ``tests/conftest.py``):
+
+* host side: :func:`repro.core.mixing.grouped_routing` covers every
+  weight>0 schedule edge exactly once with valid ppermute rounds, and
+  the pure-numpy :func:`grouped_mix_reference` oracle equals the dense
+  mixing matrix for any G;
+* device side: :func:`repro.dist.sync.fedlay_mix` under ``shard_map``
+  ≡ the dense ``schedule_mixing_matrix`` / ``masked_mixing_matrix``
+  oracles for G ∈ {1, 2, 4}, masked and unmasked, and
+  :func:`global_mixer` ≡ :func:`make_mixer` on the same mesh;
+* accounting: grouped :func:`sync_bytes_per_client` (on-device edges
+  cost zero network bytes) against closed forms and the exact
+  per-schedule cross-edge counts.
+
+Property-based variants (hypothesis, shimmed to skip when it is not
+installed) fuzz schedules × masks × G over the same equivalences.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.mixing import (build_permute_schedule, grouped_mix_reference,
+                               grouped_routing, masked_mixing_matrix,
+                               pad_schedule, schedule_mixing_matrix)
+from repro.dist.compat import make_client_mesh, shard_map
+from repro.dist.sync import (fedlay_mix, global_mixer, make_mixer,
+                             ring_schedule, sync_bytes_per_client)
+
+GROUPS = (1, 2, 4)
+
+# Property tests can't take the function-scoped multi_device fixture
+# (hypothesis forbids fixtures under @given), so they gate on the
+# device count at collection time instead.
+EIGHT_DEVICES = jax.device_count() >= 8
+
+
+# --------------------------------------------------------------------------
+# Host side: routing decomposition + grouped dense oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G", GROUPS)
+def test_grouped_routing_covers_every_edge_once(G):
+    n = 8 * G
+    sched = build_permute_schedule(n, 3, salt=f"cov{G}")
+    rt = grouped_routing(sched, G)
+    assert rt.num_devices == 8 and rt.clients_per_device == G
+    covered = set()
+    for k in range(sched.num_slots):
+        for d in range(8):
+            for l in range(G):
+                if rt.intra_on[k][d, l] > 0:
+                    i = d * G + l
+                    src = d * G + rt.intra_src[k][d, l]
+                    assert src == sched.perms[k][i]
+                    covered.add((i, k))
+        for rnd in rt.rounds[k]:
+            srcs = [p[0] for p in rnd.pairs]
+            dsts = [p[1] for p in rnd.pairs]
+            # a valid jax.lax.ppermute: unique sources, unique dests
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+            for sd, dd in rnd.pairs:
+                i = dd * G + rnd.recv_slot[dd]
+                src = sd * G + rnd.send_row[sd]
+                assert src == sched.perms[k][i]
+                assert src // G != dd          # genuinely cross-device
+                assert (i, k) not in covered   # exactly-once coverage
+                covered.add((i, k))
+    want = {(i, k) for i in range(n) for k in range(sched.num_slots)
+            if sched.weights[i, k] > 0}
+    assert covered == want
+    assert rt.cross_edges == sum(
+        1 for (i, k) in want if sched.perms[k][i] // G != i // G)
+
+
+def test_grouped_routing_one_device_is_all_intra():
+    sched = build_permute_schedule(6, 2)
+    rt = grouped_routing(sched, 6)       # D = 1: everything on-device
+    assert rt.cross_edges == 0 and rt.max_rounds == 0
+
+
+def test_grouped_routing_g1_single_round_per_slot():
+    """G = 1 cross edges form a partial device permutation, so greedy
+    coloring must use exactly one round per slot."""
+    sched = build_permute_schedule(8, 3, salt="g1")
+    rt = grouped_routing(sched, 1)
+    assert rt.max_rounds <= 1
+
+
+def test_grouped_routing_rejects_bad_group():
+    sched = build_permute_schedule(8, 2)
+    with pytest.raises(ValueError, match="divide"):
+        grouped_routing(sched, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        grouped_routing(sched, 0)
+
+
+@pytest.mark.parametrize("G", GROUPS)
+@pytest.mark.parametrize("masked", (False, True))
+def test_grouped_reference_equals_dense_oracle(G, masked):
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"ref{G}")
+    rng = np.random.default_rng(G)
+    X = rng.normal(size=(n, 5))
+    mask = ((rng.random(n) > 0.3).astype(np.float64) if masked
+            else np.ones(n))
+    ref = masked_mixing_matrix(sched, mask) @ X
+    got = grouped_mix_reference(sched, X, G, mask=mask if masked else None)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_grouped_reference_on_padded_schedule():
+    """Dead capacity slots (weight-0 self-loops) never touch the wire
+    and pass through the grouped decomposition untouched."""
+    sched = build_permute_schedule(6, 2)
+    padded = pad_schedule(sched, (0, 1, 2, 4, 5, 7), 8)
+    mask = np.zeros(8)
+    mask[[0, 1, 2, 4, 5, 7]] = 1
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(8, 4))
+    for G in (1, 2, 4):
+        got = grouped_mix_reference(padded, X, G, mask=mask)
+        ref = masked_mixing_matrix(padded, mask) @ X
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Device side: shard_map grouped mixing on the real 8-device mesh
+# --------------------------------------------------------------------------
+
+def _mix_on_mesh(sched, G, X, mask=None, num_devices=8):
+    """Run fedlay_mix under shard_map with the grouped (G, ...) layout
+    and return the (n, dim) result."""
+    mesh = make_client_mesh(num_devices, "data")
+    shard = NamedSharding(mesh, P("data"))
+    W = jnp.asarray(sched.weights)
+    S = jnp.asarray(sched.self_weight)
+    if mask is None:
+        def body(x, w, s):
+            return fedlay_mix({"m": x}, sched, w, s, "data")["m"]
+        in_specs = (P("data"),) * 3
+        args = (jnp.asarray(X), W, S)
+    else:
+        def body(x, w, s, m):
+            return fedlay_mix({"m": x}, sched, w, s, "data", mask=m)["m"]
+        in_specs = (P("data"),) * 4
+        args = (jnp.asarray(X), W, S, jnp.asarray(mask, jnp.float32))
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=P("data"), check_vma=False))
+    return np.asarray(f(*[jax.device_put(a, shard) for a in args]))
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("G", GROUPS)
+def test_grouped_fedlay_mix_equals_dense_oracle(G, multi_device):
+    """The acceptance pin: grouped shard_map mixing ≡ W·X on a real
+    8-device mesh for G ∈ {1, 2, 4}."""
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"dev{G}")
+    rng = np.random.default_rng(G)
+    X = rng.normal(size=(n, 17)).astype(np.float32)
+    out = _mix_on_mesh(sched, G, X)
+    ref = schedule_mixing_matrix(sched) @ X
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("G", GROUPS)
+def test_grouped_masked_fedlay_mix_equals_dense_oracle(G, multi_device):
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"mdev{G}")
+    rng = np.random.default_rng(G + 10)
+    X = rng.normal(size=(n, 9)).astype(np.float32)
+    mask = (rng.random(n) > 0.4).astype(np.float32)
+    mask[0] = 0.0                       # at least one dead client
+    out = _mix_on_mesh(sched, G, X, mask=mask)
+    ref = masked_mixing_matrix(sched, mask) @ X
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    # masked-out rows pass through untouched
+    np.testing.assert_array_equal(out[0], X[0])
+
+
+@pytest.mark.multi_device
+def test_grouped_mask_renormalizes_over_alive_local_clients(multi_device):
+    """A fully dead device group: its rows pass through, and live
+    clients on other devices renormalize over the surviving weights."""
+    G, n = 2, 16
+    sched = build_permute_schedule(n, 2, salt="deadgrp")
+    mask = np.ones(n, np.float32)
+    mask[4:6] = 0.0                     # device 2's whole group is dead
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 7)).astype(np.float32)
+    out = _mix_on_mesh(sched, G, X, mask=mask)
+    ref = masked_mixing_matrix(sched, mask) @ X
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    np.testing.assert_array_equal(out[4:6], X[4:6])
+    # the masked dense matrix is row-stochastic, so live rows actually
+    # renormalized rather than losing the dead group's mass
+    W = masked_mixing_matrix(sched, mask)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("G", GROUPS)
+@pytest.mark.parametrize("strategy", ("fedlay", "ring", "allreduce"))
+def test_make_mixer_equals_global_mixer_on_mesh(G, strategy, multi_device):
+    """The two device paths agree under the grouped layout: the
+    explicit shard_map program ≡ the auto-sharded global-view program,
+    for every strategy."""
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"gg{G}")
+    mesh = make_client_mesh(8, "data")
+    shard = NamedSharding(mesh, P("data"))
+    rng = np.random.default_rng(G)
+    X = jnp.asarray(rng.normal(size=(n, 11)).astype(np.float32))
+    W = jnp.asarray(sched.weights)
+    S = jnp.asarray(sched.self_weight)
+    mixer = make_mixer(strategy, sched, "data", n, clients_per_device=G)
+
+    def body(x, w, s):
+        return mixer({"m": x}, w, s)["m"]
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data"),) * 3,
+                          out_specs=P("data"), check_vma=False))
+    out_shard = np.asarray(f(*[jax.device_put(a, shard)
+                               for a in (X, W, S)]))
+    gsched = ring_schedule(n) if strategy == "ring" else sched
+    out_global = np.asarray(jax.jit(global_mixer(
+        strategy, gsched if strategy != "allreduce" else None,
+        clients_per_device=G))(X))
+    np.testing.assert_allclose(out_shard, out_global, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Property-based equivalence (hypothesis; skips when not installed)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(),
+       G=st.sampled_from(GROUPS),
+       L=st.integers(min_value=1, max_value=3),
+       salt=st.integers(min_value=0, max_value=10**6))
+def test_property_grouped_reference_vs_dense(data, G, L, salt):
+    """Host-side fuzz: random schedules × masks × G — the grouped
+    decomposition reconstructs the dense masked oracle exactly."""
+    D = data.draw(st.integers(min_value=1, max_value=8), label="devices")
+    n = D * G
+    sched = build_permute_schedule(n, L, salt=f"h{salt}")
+    bits = data.draw(st.lists(st.booleans(), min_size=n, max_size=n),
+                     label="mask")
+    mask = np.asarray(bits, np.float64)
+    rng = np.random.default_rng(salt)
+    X = rng.normal(size=(n, 3))
+    ref = masked_mixing_matrix(sched, mask) @ X
+    got = grouped_mix_reference(sched, X, G, mask=mask)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+@pytest.mark.multi_device
+@pytest.mark.skipif(not EIGHT_DEVICES, reason="needs 8 host devices")
+@settings(max_examples=8, deadline=None)
+@given(data=st.data(),
+       G=st.sampled_from(GROUPS),
+       salt=st.integers(min_value=0, max_value=10**6))
+def test_property_grouped_fedlay_mix_vs_dense(data, G, salt):
+    """Device-side fuzz on the 8-device mesh: grouped fedlay_mix ≡
+    masked_mixing_matrix for random schedules × masks × G."""
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"d{salt}")
+    bits = data.draw(st.lists(st.booleans(), min_size=n, max_size=n),
+                     label="mask")
+    mask = np.asarray(bits, np.float32)
+    rng = np.random.default_rng(salt)
+    X = rng.normal(size=(n, 6)).astype(np.float32)
+    out = _mix_on_mesh(sched, G, X, mask=mask)
+    ref = masked_mixing_matrix(sched, mask) @ X
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+@pytest.mark.multi_device
+@pytest.mark.skipif(not EIGHT_DEVICES, reason="needs 8 host devices")
+@settings(max_examples=8, deadline=None)
+@given(G=st.sampled_from(GROUPS),
+       salt=st.integers(min_value=0, max_value=10**6))
+def test_property_global_mixer_equals_make_mixer(G, salt):
+    """Fuzzed sibling of the fixed-seed two-path agreement test."""
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"p{salt}")
+    rng = np.random.default_rng(salt)
+    X = rng.normal(size=(n, 5)).astype(np.float32)
+    out_shard = _mix_on_mesh(sched, G, X)
+    out_global = np.asarray(jax.jit(global_mixer(
+        "fedlay", sched, clients_per_device=G))(jnp.asarray(X)))
+    np.testing.assert_allclose(out_shard, out_global, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Grouped communication accounting
+# --------------------------------------------------------------------------
+
+def test_sync_bytes_grouped_accounting():
+    """Table-3-style pinning of the grouped network-bytes model:
+    on-device edges are free, one device means zero wire bytes."""
+    mb = 1_000_000
+    # G = 1 keeps the paper's numbers bit-for-bit
+    assert sync_bytes_per_client("fedlay", mb, 16, 3) == 6 * mb
+    assert sync_bytes_per_client("ring", mb, 16) == 2 * mb
+    assert sync_bytes_per_client("complete", mb, 16) == 15 * mb
+    # grouped fedlay: expected cross fraction (n-G)/(n-1)
+    got = sync_bytes_per_client("fedlay", mb, 16, 3, clients_per_device=2)
+    assert got == pytest.approx(6 * mb * 14 / 15)
+    # whole population on one device: every strategy costs 0 on the wire
+    for strat in ("fedlay", "ring", "complete", "allreduce"):
+        assert sync_bytes_per_client(strat, mb, 16, 3,
+                                     clients_per_device=16) == 0.0
+    # device-contiguous ring: only 2 of each group's 2G edges cross
+    assert sync_bytes_per_client("ring", mb, 16, clients_per_device=4) \
+        == pytest.approx(2 * mb / 4)
+    # hierarchical allreduce: local reduce free, ring over D devices,
+    # amortized over the G clients per device
+    got = sync_bytes_per_client("allreduce", mb, 16, clients_per_device=2)
+    assert got == pytest.approx(2 * (7 / 8) * mb / 2)
+    assert sync_bytes_per_client("complete", mb, 16, clients_per_device=4) \
+        == 12 * mb
+    with pytest.raises(ValueError, match="divide"):
+        sync_bytes_per_client("fedlay", mb, 16, 3, clients_per_device=3)
+
+
+@pytest.mark.parametrize("G", GROUPS)
+def test_sync_bytes_tracks_exact_cross_edges(G):
+    """The closed form is the expectation of the exact per-schedule
+    count: pin the exact counter, and the expectation within a loose
+    band over schedule salts."""
+    n, L, mb = 8 * G, 3, 1.0
+    exact = []
+    for salt in range(8):
+        sched = build_permute_schedule(n, L, salt=f"b{salt}")
+        rt = grouped_routing(sched, G)
+        # per-client exact network bytes for this schedule
+        exact.append(rt.cross_edges * mb / n)
+        # never more than the flat-layout paper bound
+        assert rt.cross_edges <= 2 * L * n
+    model = sync_bytes_per_client("fedlay", mb, n, L, clients_per_device=G)
+    assert model <= 2 * L * mb
+    # the closed form is the paper's degree-bound expectation; the exact
+    # count also prunes duplicate adjacencies (a peer adjacent in
+    # several spaces is exchanged once), so it sits at or below the
+    # model, within a loose band
+    assert np.mean(exact) <= model + 1e-9
+    assert np.mean(exact) >= 0.6 * model
+    if G > 1:
+        # grouping strictly saves wire bytes vs the flat layout
+        flat = np.mean([grouped_routing(
+            build_permute_schedule(n, L, salt=f"b{s}"), 1).cross_edges
+            for s in range(8)]) / n
+        assert np.mean(exact) < flat
