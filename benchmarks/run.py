@@ -1,13 +1,21 @@
 """Benchmark harness front door — one module per paper table/figure plus
 the roofline and the beyond-paper collective comparison.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig8] [--json]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig8]
+                                          [--json] [--baseline]
 
 Default is quick mode (CPU-friendly); --full reproduces the paper-scale
 settings.  Output: CSV rows ``table,key=value,...``.  With ``--json``
 each benchmark additionally writes a machine-readable
-``BENCH_<name>.json`` at the repo root (rows + wall time + mode) so the
-perf trajectory accumulates across commits.
+``BENCH_<name>.json`` at the repo root (rows + wall time + mode) and
+appends a slim record to the ``BENCH_history.jsonl`` append-log
+(untracked, uploaded as a CI artifact), so the perf trajectory
+accumulates across runs.  ``--baseline`` (implies ``--json``) compares
+against the committed ``git HEAD`` copy of each ``BENCH_<name>.json``
+(falling back to the artifact on disk when untracked) and exits nonzero
+when any perf field regresses by more than 25% (lower-is-better
+fields: ``seconds`` / ``*_ms``; higher-is-better: ``*_per_s`` /
+``speedup``; rows are matched by their non-perf identity fields).
 """
 
 from __future__ import annotations
@@ -15,14 +23,17 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
+from typing import Dict, List, Optional, Tuple
 
 from . import (churn_swap, common, crosspod, fig3_topology, fig8_churn,
                fig11_noniid, fig12_async, fig13_locality, fig15_compute_cost,
                fig16_confidence, fig18_churn_accuracy, fig20_scalability,
-               roofline, slot_runtime, sync_collectives, table3_accuracy)
+               mix_fusion, roofline, slot_runtime, sync_collectives,
+               table3_accuracy)
 
 MODULES = {
     "fig3": fig3_topology,
@@ -40,9 +51,14 @@ MODULES = {
     "crosspod": crosspod,
     "churn_swap": churn_swap,
     "slot_runtime": slot_runtime,
+    "mix_fusion": mix_fusion,
 }
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+HISTORY = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
+
+#: Regression gate for --baseline: new must stay within 25% of committed.
+REGRESSION_TOLERANCE = 0.25
 
 
 def _write_json(name: str, *, quick: bool, seconds: float, failed: bool,
@@ -56,6 +72,107 @@ def _write_json(name: str, *, quick: bool, seconds: float, failed: bool,
     return path
 
 
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def _append_history(name: str, *, quick: bool, seconds: float, failed: bool,
+                    rows) -> None:
+    """One line per benchmark run: the perf trajectory across commits."""
+    record = {"ts": round(time.time(), 1), "git_sha": _git_sha(),
+              "benchmark": name, "quick": quick,
+              "seconds": round(seconds, 2), "failed": failed,
+              "rows": rows}
+    with open(HISTORY, "a") as f:
+        f.write(json.dumps(record) + "\n")
+
+
+# --------------------------------------------------------------------------
+# --baseline: compare perf fields against the committed BENCH artifacts
+# --------------------------------------------------------------------------
+
+def perf_direction(key: str) -> Optional[int]:
+    """+1: higher is better; -1: lower is better; None: not a perf
+    field (identity or accuracy data, never gated)."""
+    if key == "seconds" or key.endswith("_ms"):
+        return -1
+    if key == "speedup" or key.endswith("_per_s"):
+        return +1
+    return None
+
+
+def _row_identity(row: Dict) -> Tuple:
+    """A row's match key: its table plus every non-perf str/bool/int
+    field (floats are measurements, not identity)."""
+    return tuple(sorted(
+        (k, v) for k, v in row.items()
+        if perf_direction(k) is None and isinstance(v, (str, bool, int))))
+
+
+def compare_rows(baseline_rows: List[Dict], new_rows: List[Dict],
+                 tolerance: float = REGRESSION_TOLERANCE) -> List[str]:
+    """Regression messages for every matched row whose perf field got
+    more than ``tolerance`` worse than the baseline.  Unmatched rows
+    (new tables, changed identities) are never regressions."""
+    by_id: Dict[Tuple, Dict] = {}
+    for row in baseline_rows:
+        by_id.setdefault(_row_identity(row), row)
+    out = []
+    for row in new_rows:
+        base = by_id.get(_row_identity(row))
+        if base is None:
+            continue
+        for key, new in row.items():
+            direction = perf_direction(key)
+            base_v = base.get(key)
+            if (direction is None or not isinstance(new, (int, float))
+                    or not isinstance(base_v, (int, float))
+                    or base_v <= 0 or new <= 0):
+                continue
+            ratio = new / base_v
+            worse = ratio > 1 + tolerance if direction < 0 \
+                else ratio < 1 / (1 + tolerance)
+            if worse:
+                ident = ",".join(f"{k}={v}" for k, v in _row_identity(row))
+                out.append(f"{ident}: {key} {base_v} -> {new} "
+                           f"({ratio:.2f}x, tolerance {tolerance:.0%})")
+    return out
+
+
+def _load_baseline(name: str, quick: bool) -> Optional[List[Dict]]:
+    """The committed (git HEAD) BENCH_<name>.json rows, falling back to
+    the artifact currently on disk (e.g. a CI-downloaded baseline) when
+    the file is not tracked; None unless comparable (same mode, not a
+    failed run)."""
+    data = None
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:BENCH_{name}.json"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            data = json.loads(out.stdout)
+    except Exception:
+        data = None
+    if data is None:
+        path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return None
+    if data.get("failed") or data.get("quick") != quick:
+        return None
+    return data.get("rows") or None
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
@@ -63,8 +180,15 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
     ap.add_argument("--json", action="store_true",
-                    help="also write BENCH_<name>.json at the repo root")
+                    help="also write BENCH_<name>.json at the repo root "
+                         "and append to BENCH_history.jsonl")
+    ap.add_argument("--baseline", action="store_true",
+                    help="compare against the committed BENCH_<name>.json "
+                         "and exit nonzero on >25%% perf regression "
+                         "(implies --json)")
     args = ap.parse_args()
+    if args.baseline:
+        args.json = True
 
     names = list(MODULES) if not args.only else args.only.split(",")
     unknown = [n for n in names if n not in MODULES]
@@ -72,10 +196,13 @@ def main() -> int:
         ap.error(f"unknown benchmark(s) {unknown}; "
                  f"choose from {', '.join(MODULES)}")
     failures = []
+    regressions: List[str] = []
     for name in names:
         mod = MODULES[name]
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
+        baseline = (_load_baseline(name, quick=not args.full)
+                    if args.baseline else None)
         if args.json:
             common.start_json_capture()
         try:
@@ -85,16 +212,32 @@ def main() -> int:
             traceback.print_exc()
         finally:
             if args.json:
-                path = _write_json(
-                    name, quick=not args.full, seconds=time.time() - t0,
-                    failed=name in failures,
-                    rows=common.end_json_capture())
-                print(f"# wrote {os.path.relpath(path, REPO_ROOT)}",
-                      flush=True)
+                rows = common.end_json_capture()
+                seconds = time.time() - t0
+                path = _write_json(name, quick=not args.full,
+                                   seconds=seconds,
+                                   failed=name in failures, rows=rows)
+                _append_history(name, quick=not args.full, seconds=seconds,
+                                failed=name in failures, rows=rows)
+                print(f"# wrote {os.path.relpath(path, REPO_ROOT)} "
+                      f"(+ BENCH_history.jsonl)", flush=True)
+                if baseline is not None and name not in failures:
+                    found = compare_rows(baseline, rows)
+                    for msg in found:
+                        print(f"# REGRESSION {name}: {msg}",
+                              file=sys.stderr, flush=True)
+                    regressions.extend(f"{name}: {m}" for m in found)
+                elif args.baseline and baseline is None:
+                    print(f"# no comparable committed baseline for {name}",
+                          flush=True)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     if failures:
         print(f"# FAILED: {failures}", file=sys.stderr)
         return 1
+    if regressions:
+        print(f"# {len(regressions)} perf regression(s) vs committed "
+              f"baseline", file=sys.stderr)
+        return 2
     return 0
 
 

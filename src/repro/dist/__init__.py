@@ -1,29 +1,37 @@
 """The distribution layer: host-side overlay artifacts compiled into
 on-device sharding + collective programs.
 
-Two modules:
+Three modules:
 
 * :mod:`repro.dist.sharding` — PartitionSpec rules for every parameter /
   cache / batch pytree (FSDP, tensor-parallel, expert-parallel, and the
   DFL client axis), plus divisibility enforcement against a mesh.
+* :mod:`repro.dist.flat` — the flat-buffer layout of the fused mixing
+  hot path: :class:`~repro.dist.flat.FlatSpec` ravels a ``(B, ...)``
+  params tree into one contiguous lane-padded ``(B, N)`` buffer with
+  dtype-preserving per-leaf offsets (and back, exactly).
 * :mod:`repro.dist.sync` — the FedLay overlay compiled into static
   ``ppermute`` mixing (the TPU image of the paper's NDMP neighbor
-  tables), the all-reduce / ring / none baselines, and the paper's
-  per-client communication accounting.
+  tables) with the opt-in ``fuse="flat"`` Pallas fused round, the
+  all-reduce / ring / none baselines, and the paper's per-client
+  communication accounting.
 """
 
-from . import compat, sharding, sync
+from . import compat, flat, sharding, sync
 from .compat import make_client_mesh, shard_map
+from .flat import FlatSpec
 from .sharding import (batch_spec, cache_specs, enforce_divisibility,
                        param_specs, spec_for_leaf)
-from .sync import (fedlay_mix, global_mixer, make_mixer, ring_schedule,
-                   sync_bytes_per_client)
+from .sync import (FUSE_MODES, check_fuse, fedlay_mix, global_mixer,
+                   make_mixer, ring_schedule, sync_bytes_per_client)
 
 __all__ = [
-    "compat", "sharding", "sync",
+    "compat", "flat", "sharding", "sync",
     "make_client_mesh", "shard_map",
+    "FlatSpec",
     "batch_spec", "cache_specs", "enforce_divisibility", "param_specs",
     "spec_for_leaf",
+    "FUSE_MODES", "check_fuse",
     "fedlay_mix", "global_mixer", "make_mixer", "ring_schedule",
     "sync_bytes_per_client",
 ]

@@ -38,6 +38,33 @@ the schedule's weight table and ``self_weight`` the local (G,) slice
 mask.  ``G == 1`` degenerates to the original one-ppermute-per-slot
 program.
 
+**The flat-buffer fused hot path** (``fuse="flat"``, opt-in on both
+mixer families): instead of walking the tree once per leaf per slot —
+which materializes up to 2L full-model temporaries per round — the
+params tree is raveled once into a contiguous lane-padded (B, N)
+buffer (:class:`repro.dist.flat.FlatSpec`: per-leaf dtype-preserving
+lane-aligned offsets) and the whole round runs on that buffer with the
+:mod:`repro.kernels.weighted_mix` Pallas kernels:
+
+* shard_map path — each ppermute moves one flat row; every received
+  row streams into the accumulator via the incremental
+  :func:`~repro.kernels.weighted_mix.mix_accumulate` entry, so only
+  {own, acc, current receive} ever exist at once, independent of 2L;
+* global path — one :func:`~repro.kernels.weighted_mix.gather_mix`
+  kernel per round over the resident (C, N) population buffer: static
+  source rows (the schedule's perms), runtime weight table.  Masking
+  (dead capacity slots, multirate skips) only rewrites the (C, 2L+1)
+  weight table — renormalizing over surviving sources, identity rows
+  for dead clients — with **zero retrace**.  Note GSPMD treats the
+  kernel as opaque, so the fused global path shines where the
+  population buffer is resident per process (slot runtime, capacity
+  controllers); wire-optimal multi-device mixing stays with the
+  shard_map path.
+
+Both fused paths are pinned ≡ the dense ``masked_mixing_matrix`` /
+``schedule_mixing_matrix`` oracles (and the tree walk) in
+``tests/test_flat.py``.
+
 Plus :func:`sync_bytes_per_client`, the paper's per-round communication
 accounting (§IV-D / Fig. 20) shared by the scalability benchmarks —
 grouped mixing pays network bytes only for cross-device edges.
@@ -52,9 +79,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.mixing import PermuteSchedule, check_group_size, grouped_routing
+from ..kernels.weighted_mix import gather_mix, mix_accumulate
+from .flat import FlatSpec
 
 #: Sync strategies understood by both mixer factories.
 SYNC_STRATEGIES = ("fedlay", "allreduce", "ring", "none")
+
+#: Mixing-round execution modes: ``None``/``"tree"`` — the per-leaf jnp
+#: tree walk; ``"flat"`` — the FlatSpec + Pallas fused hot path.
+FUSE_MODES = (None, "tree", "flat")
+
+
+def check_fuse(fuse: Optional[str]) -> Optional[str]:
+    """Validate a fuse mode and normalize the default spelling
+    (``"tree"`` ≡ ``None``, the unfused walk)."""
+    if fuse not in FUSE_MODES:
+        raise ValueError(
+            f"unknown fuse mode {fuse!r}; choose from {FUSE_MODES}")
+    return None if fuse == "tree" else fuse
 
 
 def ring_schedule(num_clients: int) -> PermuteSchedule:
@@ -82,7 +124,8 @@ def ring_schedule(num_clients: int) -> PermuteSchedule:
 
 def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
                self_weight: jnp.ndarray, axis_name: str,
-               mask: Optional[jnp.ndarray] = None):
+               mask: Optional[jnp.ndarray] = None,
+               fuse: Optional[str] = None):
     """One FedLay mixing round inside ``shard_map``.
 
     ``tree`` leaves carry a leading local-client dim of size G (the
@@ -108,7 +151,16 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
     :func:`repro.core.mixing.masked_mixing_matrix`.  The mask rides the
     same routing as the models, so masking adds scalar permutes, not a
     retrace.
+
+    ``fuse="flat"`` (opt-in) runs the round on the flat-buffer fused
+    hot path (module docstring): the tree is raveled once into a
+    lane-padded (G, N) buffer, each slot's receive moves that one row
+    and streams straight into the Pallas
+    :func:`~repro.kernels.weighted_mix.mix_accumulate` accumulator —
+    same routing, same weights, same mask semantics, O(1) live
+    full-model temporaries instead of one per leaf per slot.
     """
+    fuse = check_fuse(fuse)
     G = jax.tree.leaves(tree)[0].shape[0]
     # psum of a literal is evaluated statically under shard_map tracing,
     # so a schedule/mesh layout mismatch fails loudly at trace time
@@ -159,6 +211,16 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
         self_w = self_weight
         slot_w = [weights[:, k] for k in range(sched.num_slots)]
 
+    if fuse == "flat":
+        spec = FlatSpec.for_tree(tree)
+        buf = spec.ravel(tree)                       # (G, N) lane-padded
+        acc = mix_accumulate(None, buf, self_w)
+        for k in range(sched.num_slots):
+            acc = mix_accumulate(acc, receive(buf, k), slot_w[k])
+        if masked:
+            acc = jnp.where(ok[:, None], acc, buf)
+        return spec.unravel(acc)
+
     def mix_leaf(leaf):
         shape = (G,) + (1,) * (leaf.ndim - 1)
         acc = leaf * self_w.reshape(shape).astype(leaf.dtype)
@@ -175,14 +237,17 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
 
 def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
                axis_name: str, num_clients: int,
-               clients_per_device: int = 1) -> Callable:
+               clients_per_device: int = 1,
+               fuse: Optional[str] = None) -> Callable:
     """Build a ``shard_map``-body mixer ``(tree, weights, self_w) -> tree``
     for one sync strategy over the client axis ``axis_name``.
 
     ``num_clients`` is the **total** client count; with
     ``clients_per_device = G > 1`` the mesh axis holds ``num_clients / G``
     devices and tree leaves carry the grouped leading (G, ...) dim (the
-    module-level contract).
+    module-level contract).  ``fuse="flat"`` selects the flat-buffer
+    fused hot path for the fedlay/ring rounds (module docstring);
+    allreduce/none have no per-slot accumulate to fuse and ignore it.
 
     * ``fedlay``   — static ppermutes from ``sched`` (paper §III); with
       G > 1, intra-device sub-mixing + edge-colored cross-device rounds;
@@ -194,6 +259,7 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
     """
     G = clients_per_device
     check_group_size(num_clients, G)
+    fuse = check_fuse(fuse)
 
     if strategy == "none":
         return lambda tree, weights, self_w: tree
@@ -216,7 +282,7 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
             i = jax.lax.axis_index(axis_name)
             w = jax.lax.dynamic_slice_in_dim(ring_w, i * G, G, axis=0)
             s = jax.lax.dynamic_slice_in_dim(ring_s, i * G, G, axis=0)
-            return fedlay_mix(tree, ring, w, s, axis_name)
+            return fedlay_mix(tree, ring, w, s, axis_name, fuse=fuse)
         return ring_mixer
 
     if strategy == "fedlay":
@@ -228,7 +294,7 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
                 f"mesh axis {axis_name!r} holds {num_clients} "
                 f"(= {num_clients // G} devices × {G})")
         return lambda tree, weights, self_w: fedlay_mix(
-            tree, sched, weights, self_w, axis_name)
+            tree, sched, weights, self_w, axis_name, fuse=fuse)
 
     raise ValueError(
         f"unknown sync strategy {strategy!r}; choose from {SYNC_STRATEGIES}")
@@ -237,7 +303,8 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
 def global_mixer(strategy: str,
                  sched: Optional[PermuteSchedule] = None,
                  masked: bool = False,
-                 clients_per_device: int = 1) -> Callable:
+                 clients_per_device: int = 1,
+                 fuse: Optional[str] = None) -> Callable:
     """Build a global-view mixer ``params -> params`` over the leading
     client axis (for auto-sharded jit, e.g. ``dfl_train_bundle``).
 
@@ -260,7 +327,19 @@ def global_mixer(strategy: str,
     :func:`repro.core.mixing.masked_mixing_matrix`.  This is the seam
     the fixed-capacity slot runtime (dead slots) and multirate
     participation (slow clients skipping a collective) both plug into.
+
+    ``fuse="flat"`` (fedlay/ring) replaces the per-leaf permutation
+    gathers with **one Pallas kernel per round** over the raveled
+    (C, N) population buffer
+    (:func:`repro.kernels.weighted_mix.gather_mix`): the schedule's
+    perms become a static (C, 2L+1) source-row table (column 0 = self)
+    and the confidence weights a runtime (C, 2L+1) table.  The masked
+    variant only rewrites that weight table — renormalized over
+    surviving sources, identity rows for dead/starved clients — so the
+    mask stays a zero-retrace runtime input.  allreduce/none have no
+    per-slot accumulate to fuse and ignore ``fuse``.
     """
+    fuse = check_fuse(fuse)
     if sched is not None:
         check_group_size(sched.num_clients, clients_per_device)
     elif clients_per_device < 1:
@@ -300,6 +379,43 @@ def global_mixer(strategy: str,
         weights = jnp.asarray(sched.weights)                    # (C, 2L)
         self_w = jnp.asarray(sched.self_weight)                 # (C,)
 
+        def masked_tables(mask):
+            """(sw (C,), ew (C, 2L), ok (C,)) of mask-renormalized
+            weights — shared by the tree-walk and fused masked
+            variants so their semantics cannot drift apart."""
+            m = mask.astype(jnp.float32)
+            # source contributions gated by the source's mask, rows
+            # renormalized over what survives
+            eff = weights * jnp.take(m, perms, axis=0).T
+            total = self_w + eff.sum(axis=1)
+            ok = (m > 0) & (total > 0)
+            safe = jnp.where(total > 0, total, 1.0)
+            return self_w / safe, eff / safe[:, None], ok
+
+        if fuse == "flat":
+            # (C, 2L+1) static source rows: self first, then the 2L
+            # schedule sources — one gather_mix kernel mixes the round.
+            srcs = np.concatenate(
+                [np.arange(C)[:, None], np.array(sched.perms).T], axis=1)
+            base_table = jnp.concatenate(
+                [self_w[:, None], weights], axis=1).astype(jnp.float32)
+
+            def mix_flat(params):
+                spec = FlatSpec.for_tree(params)
+                return spec.unravel(
+                    gather_mix(spec.ravel(params), srcs, base_table))
+
+            def mix_flat_masked(params, mask):
+                sw, ew, ok = masked_tables(mask)
+                table = jnp.concatenate([sw[:, None], ew], axis=1)
+                # dead or fully starved rows: identity = self-only row
+                ident = jnp.zeros_like(table).at[:, 0].set(1.0)
+                table = jnp.where(ok[:, None], table, ident)
+                spec = FlatSpec.for_tree(params)
+                return spec.unravel(
+                    gather_mix(spec.ravel(params), srcs, table))
+            return mix_flat_masked if masked else mix_flat
+
         def mix(params):
             def mix_leaf(leaf):
                 shape = (C,) + (1,) * (leaf.ndim - 1)
@@ -312,15 +428,7 @@ def global_mixer(strategy: str,
             return jax.tree.map(mix_leaf, params)
 
         def mix_masked(params, mask):
-            m = mask.astype(jnp.float32)
-            # (C, 2L) effective weights: source contributions gated by
-            # the source's mask, rows renormalized over what survives
-            eff = weights * jnp.take(m, perms, axis=0).T
-            total = self_w + eff.sum(axis=1)
-            ok = (m > 0) & (total > 0)
-            safe = jnp.where(total > 0, total, 1.0)
-            sw = self_w / safe
-            ew = eff / safe[:, None]
+            sw, ew, ok = masked_tables(mask)
 
             def mix_leaf(leaf):
                 shape = (C,) + (1,) * (leaf.ndim - 1)

@@ -22,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .interpret import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -68,7 +70,7 @@ def _decode_kernel(nblocks, block_l, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                  pos: jnp.ndarray, block_l: int = 512,
-                 interpret: bool = False) -> jnp.ndarray:
+                 interpret: bool | None = None) -> jnp.ndarray:
     """q: (B, Hq, hd); caches: (B, L, Hkv, hd); pos: scalar int32.
 
     Returns (B, Hq, hd).  Slots with index > pos are masked (prefix
@@ -109,6 +111,6 @@ def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qg, kc, vc, pos2)
     return out.reshape(B, Hq, hd)

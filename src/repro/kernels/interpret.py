@@ -1,0 +1,30 @@
+"""Interpret-mode resolution shared by every Pallas kernel entry point.
+
+Pallas TPU kernels only *compile* on a real TPU backend; everywhere else
+(this CPU container, tier-1 CI) they must run with ``interpret=True``,
+which executes the lowered kernel semantics with plain jax ops —
+bit-accurate, traceable under ``jit``/``shard_map``, just slower.
+
+Historically the auto-detection lived only in the ``repro.kernels.ops``
+jit wrappers, so any caller importing a kernel module directly (the
+fused mixing hot path in :mod:`repro.dist.sync` does) hit the raw
+``interpret=False`` default and died on CPU with "Only interpret mode is
+supported on CPU backend".  Every kernel entry now defaults
+``interpret=None`` and resolves it here, so the Pallas kernels run
+(interpreted) in tier-1 without callers threading the flag.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` → auto: compiled on a real TPU backend, interpreted
+    everywhere else.  An explicit bool always wins (tests force
+    ``interpret=True`` to pin the interpreted semantics)."""
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"

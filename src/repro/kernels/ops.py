@@ -1,9 +1,15 @@
 """jit'd front doors for the Pallas kernels.
 
-``interpret`` defaults to auto: real TPU → compiled kernel; anything
-else (this CPU container, tests) → ``interpret=True``, which executes
-the kernel body in Python per grid cell — bit-accurate to the lowered
-semantics, so the sweep tests validate the real kernel logic.
+``interpret`` defaults to auto everywhere — real TPU → compiled kernel;
+anything else (this CPU container, tests) → ``interpret=True``, which
+executes the kernel body per grid cell with plain jax ops —
+bit-accurate to the lowered semantics, so the sweep tests validate the
+real kernel logic.  The detection itself lives in
+:func:`repro.kernels.interpret.resolve_interpret` and is applied inside
+each kernel module, so direct kernel imports (the fused mixing hot path
+in :mod:`repro.dist.sync`) get the same auto behavior as these jit
+wrappers; passing ``interpret=None`` here simply forwards the auto
+default.
 """
 
 from __future__ import annotations
@@ -18,27 +24,23 @@ from .ssd_scan import ssd_scan as _ssd_scan
 from .weighted_mix import weighted_mix as _weighted_mix
 
 
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def weighted_mix(models, weights, block_n: int = 65536,
+def weighted_mix(models, weights, *, mask=None, block_n: int | None = None,
                  interpret: bool | None = None):
-    interp = _auto_interpret() if interpret is None else interpret
-    return _weighted_mix(models, weights, block_n=block_n, interpret=interp)
+    # mask is keyword-only so the historical positional third argument
+    # (block_n) can never be silently reinterpreted as a mask
+    return _weighted_mix(models, weights, mask=mask, block_n=block_n,
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
 def flash_decode(q, k_cache, v_cache, pos, block_l: int = 512,
                  interpret: bool | None = None):
-    interp = _auto_interpret() if interpret is None else interpret
     return _flash_decode(q, k_cache, v_cache, pos, block_l=block_l,
-                         interpret=interp)
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 256,
              interpret: bool | None = None):
-    interp = _auto_interpret() if interpret is None else interpret
-    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interp)
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

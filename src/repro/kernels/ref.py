@@ -8,11 +8,38 @@ import jax
 import jax.numpy as jnp
 
 
-def weighted_mix_ref(models: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
-    """models (K, N), weights (K,) → Σ_k w_k·models_k, in models.dtype."""
-    acc = jnp.sum(models.astype(jnp.float32)
-                  * weights.astype(jnp.float32)[:, None], axis=0)
+def weighted_mix_ref(models: jnp.ndarray, weights: jnp.ndarray,
+                     mask=None) -> jnp.ndarray:
+    """models (K, N), weights (K,) → Σ_k w_k·models_k, in models.dtype.
+
+    With ``mask`` (K,): drop masked-out models and renormalize the
+    surviving weights (all-masked → zeros), mirroring the kernel's
+    masked variant."""
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        eff = w * mask.astype(jnp.float32)
+        total = jnp.sum(eff)
+        w = jnp.where(total > 0, eff / jnp.where(total > 0, total, 1.0),
+                      jnp.zeros_like(eff))
+    acc = jnp.sum(models.astype(jnp.float32) * w[:, None], axis=0)
     return acc.astype(models.dtype)
+
+
+def mix_accumulate_ref(acc, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """acc (B, N) or None, x (B, N), w (B,) → acc + w·x (w·x when acc is
+    None), f32 math, cast to x (resp. acc) dtype."""
+    wx = x.astype(jnp.float32) * w.astype(jnp.float32)[:, None]
+    if acc is None:
+        return wx.astype(x.dtype)
+    return (acc.astype(jnp.float32) + wx).astype(acc.dtype)
+
+
+def gather_mix_ref(buf: jnp.ndarray, srcs, weights: jnp.ndarray) -> jnp.ndarray:
+    """buf (C, N), srcs (C, K1) static ints, weights (C, K1) →
+    out[i] = Σ_k weights[i, k]·buf[srcs[i, k]], in buf.dtype."""
+    gathered = buf.astype(jnp.float32)[jnp.asarray(srcs)]      # (C, K1, N)
+    acc = jnp.sum(gathered * weights.astype(jnp.float32)[..., None], axis=1)
+    return acc.astype(buf.dtype)
 
 
 def flash_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,

@@ -22,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .interpret import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -73,7 +75,7 @@ def _ssd_kernel(nchunks, x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref,
 
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int = 256,
-             interpret: bool = False) -> jnp.ndarray:
+             interpret: bool | None = None) -> jnp.ndarray:
     """x: (B, S, H, P); dt: (B, S, H) post-softplus; A: (H,) negative;
     Bm/Cm: (B, S, N) single-group.  Returns y (B, S, H, P).
 
@@ -106,6 +108,6 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
         out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((Bsz, H, nc, Q, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xh, dth, a2, bh, ch)
     return y.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)

@@ -1,28 +1,52 @@
-"""Pallas TPU kernel: MEP confidence-weighted K-model aggregation.
+"""Pallas TPU kernels: MEP confidence-weighted model aggregation.
 
 The FedLay/MEP hot path on device is ``w_u ← Σ_k c_k · W_k`` over the
 own model plus the (up to 2L) neighbor models received via ppermute —
 a purely memory-bound reduction over K same-shaped parameter vectors.
-A naive jnp implementation materializes K-1 intermediate sums; the
-kernel streams one lane-aligned tile of every model through VMEM and
-writes each output tile exactly once:
+A naive jnp implementation materializes a full-model temporary per
+neighbor; the kernels here stream lane-aligned tiles through VMEM and
+write each output tile exactly once.  Three entries, matching the three
+shapes the mixing paths produce (see :mod:`repro.dist.sync`):
 
-  HBM traffic  = (K + 1) · N · sizeof(dtype)   (optimal)
-  VMEM working = K · BN · 4 bytes              (BN chosen to fit)
+* :func:`weighted_mix` — the stacked form ``(K, N) × (K,) → (N,)``,
+  optionally masked (``mask=``): masked-out models are dropped and the
+  surviving weights renormalized, the kernel image of
+  :func:`repro.core.mixing.masked_mixing_matrix` row semantics.
+  HBM traffic = (K + 1)·N·sizeof(dtype) — optimal.
+* :func:`mix_accumulate` — the incremental form
+  ``acc ← acc + w·x`` over ``(B, N)`` row buffers, so a mixing round
+  folds each ppermute-received buffer into the accumulator as it
+  arrives (receive overlapped with accumulation) instead of stacking
+  2L full-model temporaries.  ``acc=None`` is the fused init
+  ``acc ← w·x`` (the self-weight term).
+* :func:`gather_mix` — the whole-round form for a resident ``(C, N)``
+  flat population buffer: out row ``i`` = Σ_k ``weights[i, k] ·
+  buf[srcs[i, k]]`` with **host-static** source rows (the schedule's
+  perms are static per compiled mixer) and runtime weights (so churn
+  masks renormalize with zero retrace).  One kernel per mixing round:
+  each column tile of the population is read once and serves every
+  output row — HBM traffic 2·C·N regardless of the overlay degree, and
+  no materialized receive temporaries at all.
 
-Grid: 1-D over N/BN tiles.  K (≤ ~13: self + 2L neighbors) rides whole
-in VMEM per tile.  The MXU is idle — this kernel lives on the VPU —
-so the tile is sized for bandwidth, not matmul alignment.
+Grids are 1-D over N/BN lane-aligned tiles; K (≤ ~13: self + 2L
+neighbors) and C (clients per controller, ≤ a few dozen) ride whole in
+VMEM per tile.  The MXU is idle — these kernels live on the VPU — so
+tiles are sized for bandwidth, not matmul alignment.  ``interpret``
+defaults to auto (:func:`repro.kernels.interpret.resolve_interpret`):
+compiled on TPU, interpreted (still traceable under jit/shard_map)
+everywhere else.
 """
 
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
+from .interpret import resolve_interpret
 
 #: TPU vector lane width — every block's minor dim must be a multiple.
 LANE = 128
@@ -40,6 +64,19 @@ def aligned_block_n(n: int, block_n: int, lane: int = LANE) -> int:
     return min(cap, need)
 
 
+def _default_block_n(n: int, rows: int, interp: bool) -> int:
+    """Tile-width default shared by the mix entries.
+
+    Tiling exists to fit VMEM, so it only applies to the compiled
+    kernel: a ~2 MB f32 tile budget per (rows, bn) operand
+    (bn ≈ 2^19 / rows elements).  Interpret mode has no VMEM — and its
+    grid loop copies operands per cell — so it runs the whole
+    (lane-padded) vector as one grid cell."""
+    if interp:
+        return max(LANE, n)
+    return max(LANE, (2 ** 19 // max(rows, 1)) // LANE * LANE)
+
+
 def _mix_kernel(models_ref, weights_ref, out_ref):
     # models_ref: (K, BN); weights_ref: (K, 1); out: (BN,)
     w = weights_ref[...].astype(jnp.float32)            # (K, 1)
@@ -47,14 +84,33 @@ def _mix_kernel(models_ref, weights_ref, out_ref):
     out_ref[...] = jnp.sum(m * w, axis=0).astype(out_ref.dtype)
 
 
-def weighted_mix(models: jnp.ndarray, weights: jnp.ndarray,
-                 block_n: int = 65536, interpret: bool = False) -> jnp.ndarray:
+def weighted_mix(models: jnp.ndarray, weights: jnp.ndarray, *,
+                 mask: Optional[jnp.ndarray] = None,
+                 block_n: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """models: (K, N) stacked flat model vectors; weights: (K,).
 
     Returns Σ_k weights[k]·models[k] as (N,) in models.dtype.
     N is padded to a lane multiple (128) internally.
+
+    ``mask`` (optional (K,) 0/1 float) drops masked-out models and
+    renormalizes the surviving weights to sum to the original total
+    mass fraction 1 — i.e. effective weights ``w·m / Σ(w·m)`` — the
+    kernel image of one :func:`repro.core.mixing.masked_mixing_matrix`
+    row over its gathered sources.  A fully masked-out stack yields
+    zeros (callers gate that case, exactly like the dense oracle's
+    dead-row identity).  The renormalization is K scalar ops outside
+    the kernel, so masking never retraces or re-tiles.
     """
+    interp = resolve_interpret(interpret)
     K, N = models.shape
+    if block_n is None:
+        block_n = _default_block_n(N, K, interp)
+    if mask is not None:
+        eff = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+        total = jnp.sum(eff)
+        weights = jnp.where(total > 0, eff / jnp.where(total > 0, total, 1.0),
+                            jnp.zeros_like(eff))
     bn = aligned_block_n(N, block_n)
     pad = (-N) % bn
     if pad:
@@ -71,6 +127,139 @@ def weighted_mix(models: jnp.ndarray, weights: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Np,), models.dtype),
-        interpret=interpret,
+        interpret=interp,
     )(models, w2)
     return out[:N]
+
+
+def _accum_kernel(acc_ref, x_ref, w_ref, out_ref):
+    # acc/x: (B, BN); w: (B, 1) — one fused multiply-add per tile, the
+    # output tile written exactly once.
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (acc_ref[...].astype(jnp.float32)
+                    + x_ref[...].astype(jnp.float32) * w).astype(
+                        out_ref.dtype)
+
+
+def _scale_kernel(x_ref, w_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (x_ref[...].astype(jnp.float32) * w).astype(out_ref.dtype)
+
+
+def mix_accumulate(acc: Optional[jnp.ndarray], x: jnp.ndarray,
+                   w: jnp.ndarray, block_n: Optional[int] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Incremental mixing accumulate: ``acc + w[:, None]·x`` over (B, N)
+    row buffers with per-row weights (B,), tiled so each output tile is
+    written once and nothing but the running accumulator is ever
+    materialized.  ``acc=None`` is the init form ``w[:, None]·x`` (the
+    self-weight term of a mixing round), so a full round is
+
+        acc = mix_accumulate(None, own, self_w)
+        for each slot k:  acc = mix_accumulate(acc, receive(k), w_k)
+
+    — receives overlap with accumulation; at any instant only {own,
+    acc, current receive} exist, independent of the overlay degree 2L.
+    """
+    interp = resolve_interpret(interpret)
+    B, N = x.shape
+    if block_n is None:
+        block_n = _default_block_n(N, B, interp)
+    bn = aligned_block_n(N, block_n)
+    pad = (-N) % bn
+    xs = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    Np = xs.shape[1]
+    w2 = w.reshape(B, 1).astype(jnp.float32)
+    row_spec = pl.BlockSpec((B, bn), lambda i: (0, i))
+    w_spec = pl.BlockSpec((B, 1), lambda i: (0, 0))
+    if acc is None:
+        out = pl.pallas_call(
+            _scale_kernel,
+            grid=(Np // bn,),
+            in_specs=[row_spec, w_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((B, Np), x.dtype),
+            interpret=interp,
+        )(xs, w2)
+        return out[:, :N]
+    accs = jnp.pad(acc, ((0, 0), (0, pad))) if pad else acc
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid=(Np // bn,),
+        in_specs=[row_spec, row_spec, w_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Np), acc.dtype),
+        interpret=interp,
+    )(accs, xs, w2)
+    return out[:, :N]
+
+
+def _gather_mix_kernel(W_ref, models_ref, out_ref):
+    # W: (C, C) round-mixing matrix (stationary across tiles);
+    # models: (C, BN) — the whole population's column tile, read once
+    # and serving every output row via one MXU matmul.
+    out_ref[...] = jnp.dot(
+        W_ref[...], models_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def gather_mix(buf: jnp.ndarray, srcs: np.ndarray, weights: jnp.ndarray,
+               block_n: Optional[int] = None,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One whole mixing round over a resident flat population buffer.
+
+    ``buf`` (C, N): every client's raveled model; ``srcs`` (C, K1)
+    **host-static** int source rows (column 0 is conventionally the
+    client itself, the rest its schedule sources — duplicates are fine,
+    their weights just add); ``weights`` (C, K1) runtime float
+    row-mixing weights.  Returns (C, N) in ``buf.dtype`` with
+
+        out[i] = Σ_k weights[i, k] · buf[srcs[i, k]]
+
+    The (srcs, weights) table is scattered into the dense (C, C)
+    round-mixing matrix W (a tiny runtime op — the schedule bounds its
+    row support at K1 nonzeros) and the kernel runs one stationary
+    ``W @ tile`` matmul per (C, bn) column tile: the tile is read once
+    and serves all C output rows — no gather op, no materialized
+    receive temporaries — so HBM traffic is 2·C·N regardless of the
+    overlay degree, and masking only changes the runtime weight table
+    (zero retrace; the source table is static per compiled mixer,
+    churn swaps whole programs via the
+    :class:`repro.overlay.controller.MixerCache`).  Sized for one
+    controller's population (C ≲ a few hundred: the C² matmul flops
+    stay far below the memory bound): the C-row tile must fit VMEM —
+    the default ``block_n=None`` budgets the compiled tile at ~2 MB
+    (bn ≈ 2^19/C elements; shrink for larger C) and runs interpret
+    mode as a single cell (no VMEM to fit).
+    """
+    interp = resolve_interpret(interpret)
+    C, N = buf.shape
+    if block_n is None:
+        block_n = _default_block_n(N, C, interp)
+    srcs = np.asarray(srcs, np.int64)
+    if srcs.shape[0] != C or weights.shape != srcs.shape:
+        raise ValueError(
+            f"srcs {srcs.shape} / weights {weights.shape} do not match "
+            f"{(C,)} clients")
+    if srcs.min() < 0 or srcs.max() >= C:
+        raise ValueError(f"source rows out of range for {C} clients")
+    bn = aligned_block_n(N, block_n)
+    pad = (-N) % bn
+    bufs = jnp.pad(buf, ((0, 0), (0, pad))) if pad else buf
+    Np = bufs.shape[1]
+    rows = np.broadcast_to(np.arange(C)[:, None], srcs.shape)
+    W = jnp.zeros((C, C), jnp.float32).at[rows, srcs].add(
+        weights.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        _gather_mix_kernel,
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((C, C), lambda i: (0, 0)),
+            pl.BlockSpec((C, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((C, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((C, Np), buf.dtype),
+        interpret=interp,
+    )(W, bufs)
+    return out[:, :N]

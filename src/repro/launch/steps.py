@@ -214,7 +214,8 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      remat: bool = True,
                      sched: Optional[PermuteSchedule] = None,
                      masked: bool = False,
-                     clients_per_device: int = 1) -> StepBundle:
+                     clients_per_device: int = 1,
+                     fuse: Optional[str] = None) -> StepBundle:
     """``sched`` overrides the internally built overlay schedule, e.g.
     to bake an :class:`repro.overlay.OverlayController`'s converged NDMP
     schedule into a static bundle; when None the static overlay over
@@ -238,7 +239,14 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     — the grouped layout: each data-axis device hosts a block-contiguous
     group of G clients, so a simulation (or a capacity-mode slot runtime
     with ``capacity = C``) is no longer capped at the device count.
-    GSPMD keeps intra-group mixing edges on-device for free."""
+    GSPMD keeps intra-group mixing edges on-device for free.
+
+    ``fuse="flat"`` (opt-in) swaps the mixing step onto the flat-buffer
+    fused hot path: the stacked params tree is raveled once into a
+    lane-padded (C, N) buffer and the whole round runs as one Pallas
+    :func:`repro.kernels.weighted_mix.gather_mix` kernel
+    (:func:`repro.dist.sync.global_mixer` ``fuse`` docs; masked rounds
+    stay zero-retrace runtime-mask programs)."""
     from ..core.mixing import build_permute_schedule
     from ..data.tokens import input_specs as data_specs
     if sync not in SYNC_STRATEGIES:
@@ -271,7 +279,7 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     elif sync == "ring":
         sched = ring_schedule(C)
     mix = global_mixer(sync, sched, masked=masked,
-                       clients_per_device=clients_per_device)
+                       clients_per_device=clients_per_device, fuse=fuse)
 
     params_shape = jax.eval_shape(
         lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))

@@ -102,7 +102,8 @@ def run(args) -> Dict:
     # FedLay overlay over client ids 0..n-1, compiled to the ppermute
     # schedule (MEP confidence weights from the per-client data skew)
     sched = build_permute_schedule(n, args.spaces)
-    mixer = make_mixer(args.sync, sched, "data", n, clients_per_device=G)
+    mixer = make_mixer(args.sync, sched, "data", n, clients_per_device=G,
+                       fuse=getattr(args, "fuse", None))
     weights = jax.device_put(jnp.asarray(sched.weights), shard_c)
     self_w = jax.device_put(jnp.asarray(sched.self_weight), shard_c)
 
@@ -143,6 +144,10 @@ def main() -> int:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--sync", default="fedlay",
                     choices=["fedlay", "allreduce", "ring", "none"])
+    ap.add_argument("--fuse", default=None,
+                    choices=["tree", "flat"],
+                    help="mixing-round execution: per-leaf tree walk "
+                         "(default) or the flat-buffer Pallas fused path")
     ap.add_argument("--spaces", type=int, default=3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

@@ -61,9 +61,12 @@ MIXER_KINDS = ("global", "shard_map")
 class MixerCache:
     """Schedule-keyed LRU compile cache for mixers.
 
-    Keys are :class:`PermuteSchedule` values (hashable by perms+weights
-    digest), so two control epochs that converge to the same topology —
-    including the common no-op delta — share one compiled program.
+    Keys are ``(PermuteSchedule, fuse)`` pairs — schedules are hashable
+    by perms+weights digest, so two control epochs that converge to the
+    same topology (including the common no-op delta) share one compiled
+    program, while the same topology compiled for different mixing-round
+    execution modes (``fuse=None`` tree walk vs ``fuse="flat"`` Pallas
+    fused, :data:`repro.dist.sync.FUSE_MODES`) never collides.
     ``maxsize`` bounds the pinned jit closures under sustained churn
     (fresh joiner ids mint a new schedule per membership change); the
     fail→rejoin zero-retrace win only needs the recent past.
@@ -74,22 +77,25 @@ class MixerCache:
         if maxsize < 1:
             raise ValueError("maxsize must be >= 1")
         self._factory = factory
-        self._cache: "OrderedDict[PermuteSchedule, Callable]" = OrderedDict()
+        self._cache: "OrderedDict[Tuple, Callable]" = OrderedDict()
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
-    def get(self, sched: PermuteSchedule) -> Tuple[Callable, bool]:
-        """(mixer, was_hit) for a schedule, compiling on first sight."""
-        mixer = self._cache.get(sched)
+    def get(self, sched: PermuteSchedule,
+            fuse: Optional[str] = None) -> Tuple[Callable, bool]:
+        """(mixer, was_hit) for a (schedule, fuse mode), compiling on
+        first sight."""
+        key = (sched, fuse)
+        mixer = self._cache.get(key)
         if mixer is not None:
             self.hits += 1
-            self._cache.move_to_end(sched)
+            self._cache.move_to_end(key)
             return mixer, True
         self.misses += 1
         mixer = self._factory(sched)
-        self._cache[sched] = mixer
+        self._cache[key] = mixer
         while len(self._cache) > self.maxsize:
             self._cache.popitem(last=False)
             self.evictions += 1
@@ -104,22 +110,25 @@ class MixerCache:
         return len(self._cache)
 
 
-def _global_mixer_factory(strategy: str = "fedlay", masked: bool = False):
+def _global_mixer_factory(strategy: str = "fedlay", masked: bool = False,
+                          fuse: Optional[str] = None):
     import jax
     from ..dist.sync import global_mixer
 
     def build(sched: PermuteSchedule) -> Callable:
-        return jax.jit(global_mixer(strategy, sched, masked=masked))
+        return jax.jit(global_mixer(strategy, sched, masked=masked,
+                                    fuse=fuse))
     return build
 
 
 def _shard_map_mixer_factory(axis_name: str, strategy: str = "fedlay",
-                             clients_per_device: int = 1):
+                             clients_per_device: int = 1,
+                             fuse: Optional[str] = None):
     from ..dist.sync import make_mixer
 
     def build(sched: PermuteSchedule) -> Callable:
         return make_mixer(strategy, sched, axis_name, sched.num_clients,
-                          clients_per_device=clients_per_device)
+                          clients_per_device=clients_per_device, fuse=fuse)
     return build
 
 
@@ -179,7 +188,8 @@ class OverlayController:
                  measure_correctness: bool = False,
                  capacity: Optional[int] = None,
                  double_buffered: bool = False,
-                 clients_per_device: int = 1):
+                 clients_per_device: int = 1,
+                 fuse: Optional[str] = None):
         """``capacity`` switches the controller into fixed-capacity slot
         mode (:mod:`repro.runtime`): it owns a
         :class:`~repro.runtime.slots.SlotMap`, pads every rebuilt
@@ -201,6 +211,15 @@ class OverlayController:
         ones; :meth:`commit` flips the buffers.  This lets a training
         loop overlap the control step with the in-flight training step
         and still swap at a well-defined boundary.
+
+        ``fuse`` selects the mixing-round execution mode for the
+        default mixer factories (``"flat"`` = the Pallas flat-buffer
+        fused hot path, :mod:`repro.dist.sync` docs); the compile cache
+        keys on it alongside the schedule digest, so fused and unfused
+        programs for the same topology coexist without collisions.
+        Ignored when an explicit ``mixer_factory`` is supplied (the
+        factory owns its execution mode) — except that it still
+        participates in the cache key.
         """
         if mixer_kind not in MIXER_KINDS:
             raise ValueError(f"unknown mixer kind {mixer_kind!r}; "
@@ -220,6 +239,8 @@ class OverlayController:
             raise ValueError(
                 f"capacity {capacity} is not a multiple of "
                 f"clients_per_device {clients_per_device}")
+        from ..dist.sync import check_fuse
+        self.fuse = check_fuse(fuse)
         self.clients_per_device = clients_per_device
         self.slots = None
         if capacity is not None:
@@ -231,10 +252,11 @@ class OverlayController:
             self.slots = SlotMap(capacity)       # runtime<->overlay cycle
         if mixer_factory is None:
             mixer_factory = (_global_mixer_factory(
-                strategy, masked=capacity is not None)
+                strategy, masked=capacity is not None, fuse=self.fuse)
                 if mixer_kind == "global"
                 else _shard_map_mixer_factory(axis_name, strategy,
-                                              clients_per_device))
+                                              clients_per_device,
+                                              fuse=self.fuse))
         self.cache = MixerCache(mixer_factory, maxsize=cache_size)
         self.rebuilds = 0
         self.swaps = 0
@@ -363,7 +385,7 @@ class OverlayController:
         if not force and self._schedule is not None:
             # quiescent step: same schedule, genuine cache lookup, no
             # host-side rebuild and no retrace
-            self._mixer, hit = self.cache.get(self._schedule)
+            self._mixer, hit = self.cache.get(self._schedule, self.fuse)
             alive = (self._staged.alive if self._staged is not None
                      else self._alive)
             return False, False, hit, 0.0, alive
@@ -387,7 +409,7 @@ class OverlayController:
                                  self.capacity)
         rebuild_ms = (_time.perf_counter() - t0) * 1e3
         self.rebuilds += 1
-        mixer, hit = self.cache.get(sched)
+        mixer, hit = self.cache.get(sched, self.fuse)
         swapped = sched != self._schedule
         if swapped:
             self.swaps += 1

@@ -1,9 +1,11 @@
 """Benchmark-harness smoke: the quick-mode front door must exit 0 so
 benchmark-breaking API changes fail tier-1 instead of silently rotting
 (fig3 exercises the topology-metrics path, churn_swap the overlay
-control plane, slot_runtime the fixed-capacity runtime, and
-sync_collectives the grouped clients-per-device HLO accounting — all
-seconds-fast in quick mode)."""
+control plane, slot_runtime the fixed-capacity runtime,
+sync_collectives the grouped clients-per-device HLO accounting, and
+mix_fusion the flat-buffer fused mixing acceptance claims — all
+seconds-fast in quick mode).  Plus the --json side artifacts: the
+BENCH_history.jsonl append-log and the --baseline regression gate."""
 
 import json
 import os
@@ -54,6 +56,84 @@ def test_benchmarks_quick_churn_and_slot_runtime_json():
     assert by_loop["slot"]["distinct_alive"] >= 3
     assert by_loop["restack"]["retraces"] >= by_loop["restack"][
         "distinct_alive"] - 1
+
+
+def test_benchmarks_quick_mix_fusion_json():
+    """The ISSUE 5 acceptance pins through the --json path: fused ≡
+    dense oracle ≤ 1e-6 for G ∈ {1,2,4} masked+unmasked; O(1) full-model
+    temporaries per round at every L vs O(2L) for the tree walk; the
+    shard_map round moves 2L flat-row ppermutes instead of T·2L
+    per-leaf ones at identical wire bytes, and is no slower."""
+    res = _run("--only", "mix_fusion", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    with open(os.path.join(REPO, "BENCH_mix_fusion.json")) as f:
+        data = json.load(f)
+    assert not data["failed"] and data["quick"]
+    rows = data["rows"]
+    parity = [r for r in rows if r["table"] == "mix_fusion_parity"]
+    assert {(r["G"], r["masked"]) for r in parity} == \
+        {(g, m) for g in (1, 2, 4) for m in (0, 1)}
+    assert all(r["max_abs_err"] <= 1e-6 for r in parity), parity
+    temps = {(r["path"], r["spaces"]): r["full_model_temps"]
+             for r in rows if r["table"] == "mix_fusion_temps"}
+    # fused: constant (O(1)) in the overlay degree; tree walk: O(2L)
+    assert len({temps["flat", L] for L in (1, 2, 3)}) == 1
+    assert temps["flat", 3] <= 4
+    assert all(temps["tree", L] >= 2 * L for L in (1, 2, 3))
+    rnd = {r["path"]: r for r in rows if r["table"] == "mix_fusion_round"}
+    assert rnd["flat"]["ppermutes"] == 2 * rnd["flat"]["spaces"]
+    assert rnd["tree"]["ppermutes"] == \
+        rnd["tree"]["leaves"] * 2 * rnd["tree"]["spaces"]
+    assert rnd["flat"]["wire_mb_per_dev"] == rnd["tree"]["wire_mb_per_dev"]
+    # "no slower per round in quick mode" — the fused round eliminates
+    # T·2L−2L collective dispatches, which dominates even on CPU
+    assert rnd["flat"]["per_round_ms"] <= rnd["tree"]["per_round_ms"]
+
+
+def test_benchmarks_history_log_and_baseline_gate():
+    """--json appends one record per run to BENCH_history.jsonl, and
+    --baseline exits 0 against the just-committed artifact (a run is
+    its own baseline within tolerance on the deterministic fields)."""
+    hist = os.path.join(REPO, "BENCH_history.jsonl")
+    before = sum(1 for _ in open(hist)) if os.path.exists(hist) else 0
+    res = _run("--only", "fig3", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    with open(hist) as f:
+        lines = f.read().splitlines()
+    assert len(lines) == before + 1
+    rec = json.loads(lines[-1])
+    assert rec["benchmark"] == "fig3" and not rec["failed"] and rec["rows"]
+    # baseline mode: fig3 is deterministic apart from its wall-time
+    # rows, which compare within tolerance against the file just written
+    res2 = _run("--only", "fig3", "--baseline")
+    assert res2.returncode == 0, (res2.stdout[-500:], res2.stderr[-2000:])
+    assert "baseline" in res2.stdout or "REGRESSION" not in res2.stderr
+
+
+def test_baseline_compare_flags_regressions():
+    """Unit-level: compare_rows matches rows by identity and gates both
+    perf directions at the 25% tolerance."""
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.run import compare_rows, perf_direction
+    finally:
+        sys.path.remove(REPO)
+    assert perf_direction("seconds") == -1
+    assert perf_direction("per_round_ms") == -1
+    assert perf_direction("steps_per_s") == +1
+    assert perf_direction("final_loss") is None
+    base = [{"table": "t", "loop": "slot", "steps_per_s": 100.0,
+             "seconds": 2.0, "final_loss": 0.5}]
+    bad = [{"table": "t", "loop": "slot", "steps_per_s": 60.0,
+            "seconds": 3.0, "final_loss": 9.9}]
+    msgs = compare_rows(base, bad)
+    assert len(msgs) == 2 and all("tolerance" in m for m in msgs)
+    ok = [{"table": "t", "loop": "slot", "steps_per_s": 90.0,
+           "seconds": 2.2, "final_loss": 0.5}]
+    assert compare_rows(base, ok) == []
+    # unmatched identities never regress
+    assert compare_rows(base, [{"table": "t", "loop": "other",
+                                "seconds": 99.0}]) == []
 
 
 def test_benchmarks_quick_sync_collectives_grouped_json():

@@ -76,6 +76,111 @@ def test_weighted_mix_identity():
     np.testing.assert_allclose(np.asarray(out), np.asarray(m[0]), atol=1e-6)
 
 
+def test_weighted_mix_masked_renormalizes():
+    """The masked variant drops masked-out models and renormalizes the
+    surviving weights (≡ masked_mixing_matrix row semantics); an
+    all-masked stack yields zeros."""
+    m = jnp.asarray(RNG.normal(size=(5, 300)).astype(np.float32))
+    w = jnp.asarray(RNG.random(5).astype(np.float32) + 0.1)
+    mask = jnp.asarray([1, 0, 1, 1, 0], jnp.float32)
+    out = weighted_mix(m, w, mask=mask, block_n=128, interpret=True)
+    ref = weighted_mix_ref(m, w, mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # surviving effective weights sum to 1: a constant stack is fixed
+    const = jnp.ones((5, 256), jnp.float32) * 3.25
+    out_c = weighted_mix(const, w, mask=mask, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_c), 3.25, rtol=1e-6)
+    out0 = weighted_mix(m, w, mask=jnp.zeros(5), block_n=128,
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(out0), 0.0)
+
+
+def test_mix_accumulate_incremental_equals_stacked():
+    """Folding K models one at a time through the incremental entry ==
+    the stacked weighted_mix == the jnp oracle."""
+    from repro.kernels.ref import mix_accumulate_ref
+    from repro.kernels.weighted_mix import mix_accumulate
+    K, B, N = 5, 3, 515
+    models = jnp.asarray(RNG.normal(size=(K, B, N)).astype(np.float32))
+    w = jnp.asarray(RNG.random((K, B)).astype(np.float32))
+    acc = mix_accumulate(None, models[0], w[0], block_n=256, interpret=True)
+    ref = mix_accumulate_ref(None, models[0], w[0])
+    for k in range(1, K):
+        acc = mix_accumulate(acc, models[k], w[k], block_n=256,
+                             interpret=True)
+        ref = mix_accumulate_ref(ref, models[k], w[k])
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # per-row parity with the stacked kernel (row 0 of each model)
+    stacked = weighted_mix(models[:, 0, :], w[:, 0], block_n=256,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(acc[0]), np.asarray(stacked),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_mix_equals_dense_product(dtype):
+    """The whole-round kernel: static source rows + runtime weights ≡
+    the dense W·X it encodes."""
+    from repro.kernels.ref import gather_mix_ref
+    from repro.kernels.weighted_mix import gather_mix
+    C, N, K1 = 8, 1000, 5
+    rng = np.random.default_rng(3)
+    buf = jnp.asarray(rng.normal(size=(C, N)), dtype)
+    srcs = rng.integers(0, C, size=(C, K1))
+    srcs[:, 0] = np.arange(C)                   # self column
+    w = jnp.asarray(rng.random((C, K1)).astype(np.float32))
+    out = gather_mix(buf, srcs, w, block_n=256, interpret=True)
+    assert out.dtype == buf.dtype
+    ref = gather_mix_ref(buf, srcs, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+    # dense-matrix cross-check: scatter the (srcs, w) table into (C, C)
+    W = np.zeros((C, C))
+    for i in range(C):
+        for k in range(K1):
+            W[i, srcs[i, k]] += float(w[i, k])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               W @ np.asarray(buf, np.float32),
+                               **TOLS[dtype])
+
+
+def test_gather_mix_rejects_bad_tables():
+    from repro.kernels.weighted_mix import gather_mix
+    buf = jnp.ones((4, 256), jnp.float32)
+    with pytest.raises(ValueError, match="match"):
+        gather_mix(buf, np.zeros((3, 2), np.int64),
+                   jnp.ones((3, 2)), interpret=True)
+    with pytest.raises(ValueError, match="out of range"):
+        gather_mix(buf, np.full((4, 2), 9), jnp.ones((4, 2)),
+                   interpret=True)
+
+
+def test_kernels_auto_interpret_on_cpu():
+    """Regression (ISSUE 5): the raw kernel entries must run on CPU
+    without callers passing interpret= — the old interpret=False
+    default died with 'Only interpret mode is supported on CPU
+    backend', so the fused mixing hot path could never reach them."""
+    from repro.kernels.interpret import resolve_interpret
+    from repro.kernels.weighted_mix import (gather_mix, mix_accumulate,
+                                            weighted_mix as raw_mix)
+    if jax.default_backend() == "tpu":
+        pytest.skip("auto-interpret regression is about non-TPU backends")
+    assert resolve_interpret(None) is True
+    assert resolve_interpret(False) is False
+    m = jnp.asarray(RNG.normal(size=(3, 256)).astype(np.float32))
+    w = jnp.asarray([0.5, 0.25, 0.25], jnp.float32)
+    # none of these pass interpret= — all must auto-interpret
+    np.testing.assert_allclose(
+        np.asarray(raw_mix(m, w)), np.asarray(weighted_mix_ref(m, w)),
+        rtol=2e-5, atol=2e-5)
+    mix_accumulate(None, m, w)
+    gather_mix(m, np.zeros((3, 1), np.int64), jnp.ones((3, 1)))
+    # and the jit front door still accepts the explicit override
+    weighted_mix(m, w, interpret=True)
+
+
 # --------------------------------------------------------------------------
 # flash_decode
 # --------------------------------------------------------------------------
