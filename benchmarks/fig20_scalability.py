@@ -1,33 +1,223 @@
-"""Paper Fig. 20: scalability — topology quality, correctness under
-construction, and per-client communication at n up to 1000 clients
-(large-scale simulation mode: topology + protocol, no per-client
-training, exactly like the paper's >100-client methodology)."""
+"""Paper Fig. 20: scalability — now spanning the object simulator's
+exact regime (10^2–10^3) *and* the vectorized engine's population scale
+(10^5+, `repro.scale.ndmp_vec`).
+
+Quick mode runs both engines at small n with a vec-vs-object parity row
+(identical converged neighbor tables on the same churn); full mode
+pushes the vectorized engine to 10^4 and 10^5 nodes — protocol build /
+batched-churn throughput plus sampled-BFS topology quality (the dense
+eigensolve of ``evaluate_topology`` stops at 10^3).
+
+CLI (engine + sizes are selectable without editing the file)::
+
+  PYTHONPATH=src python -m benchmarks.fig20_scalability \
+      [--engine object|vec|both] [--sizes 100,1000,100000] [--full]
+
+and through the harness (artifact + regression gate)::
+
+  PYTHONPATH=src python -m benchmarks.run --only fig20 --json [--full]
+"""
 
 from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.baselines import TOPOLOGY_REGISTRY
 from repro.core.metrics import evaluate_topology
+from repro.core.ndmp import Simulator
 from repro.dist.sync import sync_bytes_per_client
+from repro.scale import VectorSimulator
 
 from .common import emit
 
+MODEL_MB = 1.1  # paper's CNN model size
+DENSE_METRICS_MAX = 1000      # evaluate_topology is O(n^2) memory
+BFS_SOURCES = 8
 
-def run(quick: bool = False) -> None:
-    sizes = (100, 300) if quick else (100, 200, 500, 1000)
-    model_mb = 1.1  # paper's CNN model size
+
+# --------------------------------------------------------------------------
+# Scalable topology metrics (CSR + sampled BFS, no dense n×n anything)
+# --------------------------------------------------------------------------
+
+def _vec_edges(sim: VectorSimulator) -> Tuple[np.ndarray, int]:
+    """Deduped undirected edge array (E, 2) over alive positions."""
+    rows, succ, _ = sim.neighbor_rows()
+    n = len(rows)
+    pairs = []
+    idx = np.arange(n)
+    for s in range(sim.num_spaces):
+        ok = succ[s] >= 0
+        a, b = idx[ok], succ[s][ok]
+        keep = a != b
+        pairs.append(np.stack([np.minimum(a[keep], b[keep]),
+                               np.maximum(a[keep], b[keep])], axis=1))
+    edges = np.unique(np.concatenate(pairs, axis=0), axis=0)
+    return edges, n
+
+
+def _csr(edges: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    both = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    order = np.argsort(both[:, 0], kind="stable")
+    both = both[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, both[:, 0] + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, both[:, 1].copy()
+
+def _sampled_aspl(indptr: np.ndarray, indices: np.ndarray, n: int,
+                  sources: int, seed: int = 0) -> Tuple[float, int]:
+    """(avg shortest path, eccentricity max) over BFS from a source
+    sample — frontier-vectorized, O(sources · (V + E))."""
+    rng = np.random.default_rng(seed)
+    srcs = rng.choice(n, size=min(sources, n), replace=False)
+    total, count, ecc = 0.0, 0, 0
+    for s in srcs:
+        dist = np.full(n, -1, dtype=np.int32)
+        dist[s] = 0
+        frontier = np.asarray([s], dtype=np.int64)
+        d = 0
+        while len(frontier):
+            d += 1
+            # all neighbors of the frontier in one gather
+            spans = [indices[indptr[u]:indptr[u + 1]] for u in frontier]
+            nxt = np.unique(np.concatenate(spans)) if spans else np.empty(0)
+            nxt = nxt[dist[nxt] < 0]
+            if not len(nxt):
+                break
+            dist[nxt] = d
+            frontier = nxt
+        reached = dist[dist > 0]
+        total += float(reached.sum())
+        count += int(len(reached))
+        ecc = max(ecc, int(dist.max()))
+    return (total / count if count else float("nan")), ecc
+
+
+# --------------------------------------------------------------------------
+# Per-engine protocol benchmarks
+# --------------------------------------------------------------------------
+
+def _bench_object(n: int) -> None:
+    t0 = time.perf_counter()
+    sim = Simulator(num_spaces=3, latency=0.05, heartbeat_period=0.5,
+                    probe_period=1.0, seed=0)
+    sim.seed_network(list(range(n)))
+    build_ms = (time.perf_counter() - t0) * 1e3
+    k = max(1, n // 100)
+    t0 = time.perf_counter()
+    for f in range(k):
+        sim.fail(f)
+    for j in range(n + 1000, n + 1000 + k):
+        sim.join(j, bootstrap=n // 2)
+    sim.run_for(30.0)
+    churn_s = time.perf_counter() - t0
+    emit("fig20_protocol", engine="object", n=n,
+         build_ms=round(build_ms, 2),
+         churn_ops_per_s=round(2 * k / churn_s, 1),
+         correctness=round(sim.correctness(), 4))
+
+
+def _bench_vec(n: int) -> None:
+    t0 = time.perf_counter()
+    sim = VectorSimulator(num_spaces=3, latency=0.05, heartbeat_period=0.5,
+                          probe_period=1.0)
+    sim.seed_network(range(n))
+    build_ms = (time.perf_counter() - t0) * 1e3
+    k = max(1, n // 100)
+    t0 = time.perf_counter()
+    sim.fail_batch(range(k))
+    sim.join_batch(range(n + 1000, n + 1000 + k))
+    sim.run_for(30.0)
+    churn_s = time.perf_counter() - t0
+    correctness = sim.correctness() if n <= 10_000 else None
+    t0 = time.perf_counter()
+    edges, n_alive = _vec_edges(sim)
+    indptr, indices = _csr(edges, n_alive)
+    deg = np.diff(indptr)
+    aspl, ecc = _sampled_aspl(indptr, indices, n_alive, BFS_SOURCES)
+    metrics_ms = (time.perf_counter() - t0) * 1e3
+    row = dict(engine="vec", n=n, build_ms=round(build_ms, 2),
+               churn_ops_per_s=round(2 * k / churn_s, 1),
+               metrics_ms=round(metrics_ms, 2),
+               avg_degree=round(float(deg.mean()), 2),
+               max_degree=int(deg.max()),
+               sampled_aspl=round(aspl, 2), sampled_ecc=ecc)
+    if correctness is not None:
+        row["correctness"] = round(correctness, 4)
+    emit("fig20_protocol", **row)
+
+
+def _parity_row(n: int) -> None:
+    """Converged-table equality of the two engines on the same churn."""
+    kw = dict(num_spaces=3, latency=0.05, heartbeat_period=0.5,
+              probe_period=1.0)
+    obj = Simulator(seed=0, **kw)
+    obj.seed_network(list(range(n)))
+    vec = VectorSimulator(**kw)
+    vec.seed_network(range(n))
+    for f in range(0, 4):
+        obj.fail(f)
+        vec.fail(f)
+    for j in range(n + 10, n + 14):
+        obj.join(j, bootstrap=n // 2)
+        vec.join(j)
+    obj.run_for(30.0)
+    vec.run_for(30.0)
+    emit("fig20_parity", n=n,
+         tables_equal=obj.neighbor_tables() == vec.neighbor_tables(),
+         object_correct=round(obj.correctness(), 4),
+         vec_correct=round(vec.correctness(), 4))
+
+
+def run(quick: bool = False, engine: Optional[str] = None,
+        sizes: Optional[Sequence[int]] = None) -> None:
+    engine = engine or ("both" if quick else "vec")
+    if sizes is None:
+        sizes = (100, 300) if quick else (10_000, 100_000)
     for n in sizes:
-        rep = evaluate_topology(TOPOLOGY_REGISTRY["fedlay"](n, 3))
-        emit("fig20_topology", n=n,
-             convergence_factor=round(rep.convergence_factor, 2),
-             diameter=rep.diameter,
-             aspl=round(rep.avg_shortest_path, 2))
+        if engine in ("object", "both") and n <= 2000:
+            _bench_object(n)
+        if engine in ("vec", "both"):
+            _bench_vec(n)
+        if n <= DENSE_METRICS_MAX:
+            rep = evaluate_topology(TOPOLOGY_REGISTRY["fedlay"](n, 3))
+            emit("fig20_topology", n=n,
+                 convergence_factor=round(rep.convergence_factor, 2),
+                 diameter=rep.diameter,
+                 aspl=round(rep.avg_shortest_path, 2))
         for strategy in ("fedlay", "allreduce", "ring", "complete"):
-            mb = sync_bytes_per_client(strategy, int(model_mb * 1e6), n, 3)
+            mb = sync_bytes_per_client(strategy, int(MODEL_MB * 1e6), n, 3)
             emit("fig20_comm", n=n, strategy=strategy,
                  mbytes_per_round_per_client=round(mb / 1e6, 2))
+        # cohort streaming: K of n active, induced-subgraph degree
+        cohort = min(64, n)
+        mb = sync_bytes_per_client("fedlay", int(MODEL_MB * 1e6), n, 3,
+                                   active_clients=cohort)
+        emit("fig20_comm", n=n, strategy="fedlay_cohort",
+             active_clients=cohort,
+             mbytes_per_round_per_client=round(mb / 1e6, 2))
+    if engine == "both":
+        _parity_row(min(sizes))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", choices=("object", "vec", "both"),
+                    default=None, help="NDMP engine(s) to benchmark")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated network sizes")
+    ap.add_argument("--full", action="store_true",
+                    help="population scale (10^4, 10^5 via the "
+                         "vectorized engine)")
+    args = ap.parse_args()
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else None)
+    run(quick=not args.full, engine=args.engine, sizes=sizes)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -29,11 +29,11 @@ import time
 import traceback
 from typing import Dict, List, Optional, Tuple
 
-from . import (churn_swap, common, crosspod, fig3_topology, fig8_churn,
-               fig11_noniid, fig12_async, fig13_locality, fig15_compute_cost,
-               fig16_confidence, fig18_churn_accuracy, fig20_scalability,
-               mix_fusion, roofline, slot_runtime, sync_collectives,
-               table3_accuracy)
+from . import (churn_swap, cohort_stream, common, crosspod, fig3_topology,
+               fig8_churn, fig11_noniid, fig12_async, fig13_locality,
+               fig15_compute_cost, fig16_confidence, fig18_churn_accuracy,
+               fig20_scalability, mix_fusion, roofline, slot_runtime,
+               sync_collectives, table3_accuracy)
 
 MODULES = {
     "fig3": fig3_topology,
@@ -52,6 +52,7 @@ MODULES = {
     "churn_swap": churn_swap,
     "slot_runtime": slot_runtime,
     "mix_fusion": mix_fusion,
+    "cohort_stream": cohort_stream,
 }
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))

@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 _FNV_OFFSET = 0xCBF29CE484222325
 _FNV_PRIME = 0x100000001B3
 _MASK64 = (1 << 64) - 1
@@ -52,6 +54,49 @@ def coordinate(node_id: object, space: int, salt: str = "") -> float:
 def coordinates(node_id: object, num_spaces: int, salt: str = "") -> tuple:
     """The full L-dimensional coordinate vector of a node."""
     return tuple(coordinate(node_id, i, salt) for i in range(num_spaces))
+
+
+def coordinates_batch(node_ids: Sequence[int], num_spaces: int,
+                      salt: str = "") -> "np.ndarray":
+    """(n, L) float64 coordinate matrix, bit-exact vs :func:`coordinate`.
+
+    Vectorizes the FNV-1a byte loop over a padded byte matrix: every
+    hash input ``f"{salt}{id}|{space}"`` is expanded to the same width,
+    and the per-byte ``h = (h ^ b) * prime`` update runs across all
+    rows at once in uint64 (numpy wraps at 2^64 exactly like the
+    scalar ``& _MASK64``).  Padding columns are handled by masking:
+    rows shorter than the width keep their running hash unchanged on
+    the columns past their own length.  This is what lets the
+    vectorized NDMP engine hash 10^5–10^6 node coordinates in
+    milliseconds instead of minutes.
+    """
+    ids = list(node_ids)
+    n = len(ids)
+    out = np.empty((n, num_spaces), dtype=np.float64)
+    if n == 0:
+        return out
+    prime = np.uint64(_FNV_PRIME)
+    for space in range(num_spaces):
+        keys = [f"{salt}{u}|{space}".encode() for u in ids]
+        width = max(len(k) for k in keys)
+        mat = np.zeros((n, width), dtype=np.uint64)
+        lens = np.empty((n,), dtype=np.int64)
+        for r, k in enumerate(keys):
+            lens[r] = len(k)
+            mat[r, :len(k)] = np.frombuffer(k, dtype=np.uint8)
+        h = np.full((n,), _FNV_OFFSET, dtype=np.uint64)
+        cols = np.arange(width)
+        for c in range(width):
+            live = lens > cols[c]
+            h = np.where(live, (h ^ mat[:, c]) * prime, h)
+        # murmur3 fmix64 finalizer, elementwise
+        h ^= h >> np.uint64(33)
+        h *= np.uint64(0xFF51AFD7ED558CCD)
+        h ^= h >> np.uint64(33)
+        h *= np.uint64(0xC4CEB9FE1A85EC53)
+        h ^= h >> np.uint64(33)
+        out[:, space] = (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+    return out
 
 
 def circular_distance(x: float, y: float) -> float:

@@ -35,12 +35,47 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
 from .coords import NodeAddress, circular_distance, coordinates
 from .topology import correctness as topology_correctness
+
+
+# --------------------------------------------------------------------------
+# The engine seam
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class SimulatorProtocol(Protocol):
+    """What the overlay control plane needs from *any* NDMP engine.
+
+    :class:`Simulator` (exact per-message discrete events, the small-n
+    oracle) and :class:`repro.scale.ndmp_vec.VectorSimulator` (flat-array
+    batched engine for 10^5–10^6 nodes) both satisfy this, so
+    :class:`repro.overlay.controller.OverlayController` is engine-
+    agnostic: it only ever polls the delta API and replays churn through
+    the three membership calls.
+
+    ``tables_version()`` may return any equatable value — the control
+    plane compares stamps for equality, never inspects them.
+    """
+
+    now: float
+    num_spaces: int
+
+    def advance(self, dt: float) -> None: ...
+    def run_until(self, t: float) -> None: ...
+    def alive_ids(self) -> List[int]: ...
+    def alive_addresses(self) -> List[NodeAddress]: ...
+    def neighbor_tables(self) -> Dict[int, frozenset]: ...
+    def tables_version(self) -> object: ...
+    def correctness(self) -> float: ...
+    def join(self, node_id: int, bootstrap: int,
+             seeds: Tuple[int, ...] = ()) -> None: ...
+    def leave(self, node_id: int) -> None: ...
+    def fail(self, node_id: int) -> None: ...
 
 
 # --------------------------------------------------------------------------
@@ -285,6 +320,10 @@ class Simulator:
 
     def run_for(self, dt: float) -> None:
         self.run_until(self.now + dt)
+
+    def advance(self, dt: float) -> None:
+        """Protocol-name alias for :meth:`run_for` (SimulatorProtocol)."""
+        self.run_for(dt)
 
     def _dispatch(self, item: Tuple) -> None:
         kind = item[0]
@@ -602,3 +641,30 @@ class Simulator:
         counts = [(n.join_messages if join_only else n.sent_messages)
                   for n in self.nodes.values()]
         return float(np.mean(counts)) if counts else 0.0
+
+    def export_state(self) -> Dict[str, np.ndarray]:
+        """Bulk flat-array snapshot of the live network — the bridge into
+        the vectorized engine's state layout (and the parity tests'
+        common currency).
+
+        Returns ``ids`` (n,) int64 sorted; ``coords`` (n, L) float64;
+        ``succ``/``pred`` (L, n) int64 neighbor *ids* with −1 for an
+        unset pointer; ``version`` (n,) int64 per-node pointer-rewrite
+        counts."""
+        ids = self.alive_ids()
+        n, L = len(ids), self.num_spaces
+        coords = np.empty((n, L), dtype=np.float64)
+        succ = np.full((L, n), -1, dtype=np.int64)
+        pred = np.full((L, n), -1, dtype=np.int64)
+        version = np.empty((n,), dtype=np.int64)
+        for r, u in enumerate(ids):
+            st = self.nodes[u]
+            coords[r] = st.coords
+            version[r] = st.version
+            for s in range(L):
+                if st.succ[s] is not None:
+                    succ[s, r] = st.succ[s]
+                if st.pred[s] is not None:
+                    pred[s, r] = st.pred[s]
+        return {"ids": np.asarray(ids, dtype=np.int64), "coords": coords,
+                "succ": succ, "pred": pred, "version": version}

@@ -447,41 +447,63 @@ def global_mixer(strategy: str,
 
 def sync_bytes_per_client(strategy: str, model_bytes: int, num_clients: int,
                           num_spaces: Optional[int] = None,
-                          clients_per_device: int = 1) -> float:
-    """*Network* bytes each client sends per mixing round (paper §IV-D
-    accounting).  With the grouped layout (``clients_per_device = G``)
-    edges between clients co-hosted on one device cost 0 network bytes,
-    so every strategy's wire cost shrinks — to exactly 0 when the whole
-    population shares one device.
+                          clients_per_device: int = 1,
+                          active_clients: Optional[int] = None) -> float:
+    """*Network* bytes each **active** client sends per mixing round
+    (paper §IV-D accounting).  With the grouped layout
+    (``clients_per_device = G``) edges between clients co-hosted on one
+    device cost 0 network bytes, so every strategy's wire cost shrinks —
+    to exactly 0 when the whole active set shares one device.
 
-    * ``fedlay``: degree ≤ 2L, each ring neighbor uniform over the other
-      n−1 clients ⇒ expected ``2L · (n−G)/(n−1) · model_bytes`` — the
-      G=1 case is the paper's constant-in-n headline ``2L·model_bytes``
+    ``active_clients = K`` models cohort streaming
+    (:mod:`repro.scale.cohort`): only K of the ``num_clients`` capacity
+    slots participate, the round's overlay is rebuilt over the cohort
+    (induced-subgraph schedule), and the SlotMap packs the cohort into
+    the lowest slots — so the closed forms are the full-participation
+    forms with K in place of n.  The observed FedLay degree is capped by
+    the cohort: ``min(2L, K−1)`` (K−1 peers exist at all; tiny cohorts
+    cannot realize 2L distinct neighbors).  Default ``None`` means full
+    participation (K = n), reproducing the original forms exactly.
+
+    * ``fedlay``: degree ≤ min(2L, K−1), each ring neighbor uniform over
+      the other K−1 active clients ⇒ expected
+      ``min(2L, K−1) · (K−G)/(K−1) · model_bytes`` — at K = n, G = 1
+      this is the paper's constant-in-n headline ``2L·model_bytes``
       (exact per-schedule counts:
-      :attr:`repro.core.mixing.GroupedRouting.cross_edges`);
-    * ``ring``: two neighbors; block-contiguous grouping makes the
-      identity ring device-contiguous, so only ``2·D`` of the ``2n``
-      messages cross devices ⇒ ``2/G · model_bytes`` per client;
-    * ``complete``: all n−1 peers, n−G of them remote;
+      :attr:`repro.core.mixing.GroupedRouting.cross_edges`, the
+      regression oracle in ``tests/test_grouped.py``);
+    * ``ring``: two neighbors; block-contiguous packing makes the
+      cohort ring device-contiguous, so only ``2·D_K`` of the ``2K``
+      messages cross the ``D_K = ⌈K/G⌉`` occupied devices ⇒
+      ``2·D_K/K · model_bytes`` per active client (``2/G`` at K = n);
+    * ``complete``: all K−1 active peers, K−G of them remote;
     * ``allreduce``: device-local reduce first (free), then a
-      bandwidth-optimal ring all-reduce over the D devices, amortized
-      over the G clients per device: ``2·(D−1)/D / G · model_bytes``;
+      bandwidth-optimal ring all-reduce over the ``D_K`` occupied
+      devices, amortized over the active clients per device:
+      ``2·(D_K−1)/D_K · D_K/K · model_bytes``;
     * ``none``: no communication.
     """
     n, G = num_clients, clients_per_device
-    D = check_group_size(n, G)
+    check_group_size(n, G)
+    K = n if active_clients is None else int(active_clients)
+    if not 1 <= K <= n:
+        raise ValueError(f"active_clients {K} out of range for "
+                         f"{n} clients")
+    d_k = -(-K // G)                 # occupied devices, lowest-slot packing
     if strategy == "fedlay":
         if num_spaces is None:
             raise ValueError("fedlay accounting needs num_spaces")
-        if D == 1:
+        if K <= 1 or d_k == 1:
             return 0.0
-        return 2.0 * num_spaces * model_bytes * (n - G) / (n - 1)
+        degree = min(2 * num_spaces, K - 1)
+        return degree * model_bytes * (K - G) / (K - 1)
     if strategy == "ring":
-        return 0.0 if D == 1 else 2.0 * model_bytes / G
+        return 0.0 if d_k == 1 else 2.0 * d_k * model_bytes / K
     if strategy == "complete":
-        return float(n - G) * model_bytes
+        return float(max(K - G, 0)) * model_bytes
     if strategy in ("allreduce", "fedavg"):
-        return 2.0 * (D - 1) / D * model_bytes / G
+        return 2.0 * (d_k - 1) / d_k * d_k * model_bytes / K \
+            if d_k > 1 else 0.0
     if strategy == "none":
         return 0.0
     raise ValueError(

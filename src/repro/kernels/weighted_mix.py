@@ -203,16 +203,22 @@ def _gather_mix_kernel(W_ref, models_ref, out_ref):
         preferred_element_type=jnp.float32).astype(out_ref.dtype)
 
 
-def gather_mix(buf: jnp.ndarray, srcs: np.ndarray, weights: jnp.ndarray,
+def gather_mix(buf: jnp.ndarray, srcs, weights: jnp.ndarray,
                block_n: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """One whole mixing round over a resident flat population buffer.
 
-    ``buf`` (C, N): every client's raveled model; ``srcs`` (C, K1)
-    **host-static** int source rows (column 0 is conventionally the
-    client itself, the rest its schedule sources — duplicates are fine,
-    their weights just add); ``weights`` (C, K1) runtime float
-    row-mixing weights.  Returns (C, N) in ``buf.dtype`` with
+    ``buf`` (C, N): every client's raveled model; ``srcs`` (C, K1) int
+    source rows (column 0 is conventionally the client itself, the rest
+    its schedule sources — duplicates are fine, their weights just
+    add); ``weights`` (C, K1) runtime float row-mixing weights.
+    ``srcs`` may be host-static (numpy: validated eagerly, the per-
+    compiled-mixer schedule case) **or traced** (jnp under jit: the
+    cohort-streaming case, where the round's source table is data — any
+    sequence of cohort compositions reuses one compiled program, since
+    the kernel only ever sees the scattered (C, C) matrix; out-of-range
+    traced sources are the caller's contract).  Returns (C, N) in
+    ``buf.dtype`` with
 
         out[i] = Σ_k weights[i, k] · buf[srcs[i, k]]
 
@@ -236,13 +242,15 @@ def gather_mix(buf: jnp.ndarray, srcs: np.ndarray, weights: jnp.ndarray,
     C, N = buf.shape
     if block_n is None:
         block_n = _default_block_n(N, C, interp)
-    srcs = np.asarray(srcs, np.int64)
+    static_srcs = not isinstance(srcs, jax.core.Tracer)
+    if static_srcs:
+        srcs = np.asarray(srcs, np.int64)
+        if srcs.min() < 0 or srcs.max() >= C:
+            raise ValueError(f"source rows out of range for {C} clients")
     if srcs.shape[0] != C or weights.shape != srcs.shape:
         raise ValueError(
             f"srcs {srcs.shape} / weights {weights.shape} do not match "
             f"{(C,)} clients")
-    if srcs.min() < 0 or srcs.max() >= C:
-        raise ValueError(f"source rows out of range for {C} clients")
     bn = aligned_block_n(N, block_n)
     pad = (-N) % bn
     bufs = jnp.pad(buf, ((0, 0), (0, pad))) if pad else buf

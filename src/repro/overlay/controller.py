@@ -51,7 +51,7 @@ import numpy as np
 from ..core.coords import NodeAddress
 from ..core.mep import ClientProfile
 from ..core.mixing import PermuteSchedule, schedule_from_addresses
-from ..core.ndmp import Simulator
+from ..core.ndmp import SimulatorProtocol
 from ..core.topology import Topology, fedlay_topology
 from .events import ChurnEvent, ChurnTrace, DeltaTracker, TableDelta
 
@@ -161,8 +161,15 @@ class ControlReport:
 
 
 class OverlayController:
-    """Closes the loop between ``core.ndmp.Simulator`` (control plane)
-    and the compiled mixer (data plane).
+    """Closes the loop between an NDMP engine (control plane) and the
+    compiled mixer (data plane).
+
+    The engine is anything satisfying
+    :class:`repro.core.ndmp.SimulatorProtocol` — the exact discrete-event
+    :class:`~repro.core.ndmp.Simulator` or the flat-array
+    :class:`repro.scale.ndmp_vec.VectorSimulator`; the controller only
+    consumes the delta API (alive_ids / neighbor_tables / tables_version
+    / advance) plus the three membership calls.
 
     ``step(dt)`` advances NDMP by ``dt`` of simulated time, detects
     table deltas, and exposes the current compiled mixer via
@@ -173,7 +180,7 @@ class OverlayController:
     membership change, not on profile drift.
     """
 
-    def __init__(self, sim: Simulator, *,
+    def __init__(self, sim: SimulatorProtocol, *,
                  mixer_kind: str = "global",
                  strategy: str = "fedlay",
                  axis_name: str = "data",

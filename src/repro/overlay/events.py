@@ -41,7 +41,7 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.ndmp import Simulator
+from ..core.ndmp import SimulatorProtocol
 
 
 # --------------------------------------------------------------------------
@@ -94,7 +94,7 @@ class ChurnTrace:
         return self.events[lo:hi]
 
     @staticmethod
-    def apply(sim: Simulator, events: Iterable[ChurnEvent]) -> None:
+    def apply(sim: SimulatorProtocol, events: Iterable[ChurnEvent]) -> None:
         """Apply ``events`` to ``sim`` at their scheduled times (the
         simulator is advanced to each event's timestamp first, so the
         NDMP message interleaving is exact)."""
@@ -203,7 +203,7 @@ class DeltaTracker:
     version check when nothing moved, full table diff otherwise.
     """
 
-    def __init__(self, sim: Simulator):
+    def __init__(self, sim: SimulatorProtocol):
         self.sim = sim
         self.epoch = 0
         self._version = sim.tables_version()

@@ -55,7 +55,7 @@ def counting_jit(fn: Callable) -> Tuple[Callable, TraceCount]:
     """``jax.jit(fn)`` plus a :class:`TraceCount` that ticks once per
     trace (compiled executions skip the Python body, so they don't
     count).  The retrace-tax instrumentation used by
-    ``benchmarks/slot_runtime``."""
+    ``benchmarks/slot_runtime`` and ``benchmarks/cohort_stream``."""
     import jax
 
     counter = TraceCount()
@@ -64,6 +64,29 @@ def counting_jit(fn: Callable) -> Tuple[Callable, TraceCount]:
         counter.traces += 1
         return fn(*args, **kwargs)
     return jax.jit(counted), counter
+
+
+# ---- capacity-row surgery (shared by SlotTrainLoop and the cohort
+# streaming runtime, repro.scale.cohort) ----------------------------------
+
+def stack_rows(trees):
+    """Stack per-client trees into one capacity-stacked tree."""
+    import jax
+    return jax.tree.map(lambda *ls: jax.numpy.stack(ls), *trees)
+
+
+def tree_row(tree, i: int):
+    """Row ``i`` of every leaf (one client's unstacked state)."""
+    import jax
+    return jax.tree.map(lambda l: l[i], tree)
+
+
+def set_tree_row(tree, i: int, row):
+    """Functionally write ``row`` into leaf row ``i`` (dtype-cast to the
+    destination — the in-place membership write of the slot runtimes)."""
+    import jax
+    return jax.tree.map(
+        lambda l, r: l.at[i].set(r.astype(l.dtype)), tree, row)
 
 
 @dataclasses.dataclass
@@ -173,8 +196,7 @@ class SlotTrainLoop:
 
     # ---- state surgery ---------------------------------------------------
     def _stack(self, trees):
-        jnp = self._jax.numpy
-        return self._jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+        return stack_rows(trees)
 
     def _shard_rows(self, tree):
         """Pin capacity-stacked leaves to the canonical row sharding
@@ -193,11 +215,10 @@ class SlotTrainLoop:
         return self._jax.tree.map(put, tree)
 
     def _row(self, tree, i: int):
-        return self._jax.tree.map(lambda l: l[i], tree)
+        return tree_row(tree, i)
 
     def _set_row(self, tree, i: int, row):
-        return self._jax.tree.map(
-            lambda l, r: l.at[i].set(r.astype(l.dtype)), tree, row)
+        return set_tree_row(tree, i, row)
 
     def client_params(self, node_id: int):
         """The (unstacked) current model of one live client."""

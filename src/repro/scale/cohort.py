@@ -1,0 +1,316 @@
+"""Cohort streaming: a fixed-capacity mesh serving an unbounded overlay.
+
+Production-FL serving shape: the device pool holds C slots but the
+overlay holds n ≫ C nodes.  Each round a :class:`CohortSampler` draws a
+K ≤ C cohort of alive nodes; the :class:`~repro.runtime.slots.SlotMap`
+reconciles it as an identity-preserving
+:class:`~repro.runtime.slots.RemapPlan` (stream-out parks a node's
+model host-side, stream-in restores it — a node that returns rounds
+later continues from its own parameters); the cohort's induced FedLay
+schedule comes from :func:`repro.core.mixing.schedule_from_addresses`
+over the cohort addresses, capacity-padded so dead slots self-loop; and
+the mixing round runs through the :func:`repro.kernels.weighted_mix.gather_mix`
+runtime-weight path with the **source table as traced data** — cohort
+composition changes are pure data, so every round of every cohort
+reuses one compiled program (0 retraces).
+
+The weighting contract (see the package docstring): the padded cohort
+schedule's dense image :func:`cohort_mixing_matrix` is row-stochastic,
+restricted to the cohort, and with the full population sampled it *is*
+the dense full-participation mixing matrix — the small-n oracle
+``tests/test_cohort.py`` pins within 1e-6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.coords import NodeAddress, coordinates_batch
+from ..core.mep import ClientProfile
+from ..core.mixing import (PermuteSchedule, pad_schedule,
+                           schedule_from_addresses, schedule_mixing_matrix)
+from ..overlay.runtime import joiner_donors
+from ..runtime.loop import counting_jit
+from ..runtime.slots import RemapPlan, SlotMap
+
+
+# --------------------------------------------------------------------------
+# Schedule → runtime gather tables
+# --------------------------------------------------------------------------
+
+def schedule_tables(sched: PermuteSchedule) -> Tuple[np.ndarray, np.ndarray]:
+    """A schedule as ``gather_mix`` tables: (C, 2L+1) ``srcs`` int32 and
+    ``weights`` float32, column 0 the self edge.  Row-stochastic by
+    schedule construction; dead slots of a padded schedule come out as
+    pure self-loops.  These are the *runtime inputs* of the cohort
+    mixer — same shapes every round, whatever the cohort."""
+    C, S = sched.num_clients, sched.num_slots
+    srcs = np.empty((C, S + 1), dtype=np.int32)
+    weights = np.empty((C, S + 1), dtype=np.float32)
+    srcs[:, 0] = np.arange(C)
+    weights[:, 0] = sched.self_weight
+    for k in range(S):
+        srcs[:, k + 1] = sched.perms[k]
+        weights[:, k + 1] = sched.weights[:, k]
+    return srcs, weights
+
+
+def cohort_addresses(cohort: Sequence[int], num_spaces: int,
+                     salt: str = "") -> List[NodeAddress]:
+    """Addresses for a cohort — coordinates are pure functions of the
+    node id (the paper's public hash), so no engine round-trip is
+    needed; the batch hasher keeps this cheap for large cohorts."""
+    ids = list(cohort)
+    coords = coordinates_batch(ids, num_spaces, salt)
+    return [NodeAddress(node_id=int(u), coords=tuple(coords[i]))
+            for i, u in enumerate(ids)]
+
+
+def cohort_schedule(cohort: Sequence[int], num_spaces: int,
+                    slot_of: Dict[int, int], capacity: int, *,
+                    salt: str = "",
+                    profiles: Optional[Dict[int, ClientProfile]] = None,
+                    alpha_d: float = 0.5, alpha_c: float = 0.5,
+                    confidence_weighted: bool = True
+                    ) -> Tuple[PermuteSchedule, PermuteSchedule]:
+    """(cohort-level, capacity-padded) schedules for one round.
+
+    The cohort-level schedule is the induced FedLay over the cohort —
+    every member's ring pred/succ *within the cohort* — built by the
+    same :func:`schedule_from_addresses` the live controller uses, so
+    cohort weighting inherits MEP confidence weighting and duplicate-
+    adjacency dedup unchanged.  The padded schedule embeds it into the
+    capacity slots per ``slot_of`` (unsampled slots self-loop)."""
+    addrs = cohort_addresses(cohort, num_spaces, salt)
+    sched = schedule_from_addresses(
+        addrs, profiles=profiles, alpha_d=alpha_d, alpha_c=alpha_c,
+        confidence_weighted=confidence_weighted)
+    padded = pad_schedule(sched, [slot_of[int(u)] for u in cohort], capacity)
+    return sched, padded
+
+
+def cohort_mixing_matrix(cohort: Sequence[int], num_spaces: int,
+                         slot_of: Dict[int, int], capacity: int,
+                         **kwargs) -> np.ndarray:
+    """The dense (capacity, capacity) oracle of one cohort round —
+    row-stochastic, identity on unsampled slots.  Test currency: the
+    device path must reproduce ``M @ buf`` within float32 tolerance,
+    and with ``cohort == alive`` this equals the full-participation
+    mixing matrix."""
+    _, padded = cohort_schedule(cohort, num_spaces, slot_of, capacity,
+                                **kwargs)
+    return schedule_mixing_matrix(padded)
+
+
+# --------------------------------------------------------------------------
+# Sampling
+# --------------------------------------------------------------------------
+
+class CohortSampler:
+    """Draw the round's K-node cohort from an engine's alive set.
+
+    Deterministic per ``(seed, round_index)`` — two runs of the same
+    trace sample identical cohorts.  ``weighted=True`` biases the draw
+    by per-node MEP confidence when the engine exposes a ``confidence``
+    row array (:class:`repro.scale.ndmp_vec.VectorSimulator`); engines
+    without one fall back to uniform.  When fewer than K nodes are
+    alive the whole population is the cohort."""
+
+    def __init__(self, sim, cohort_size: int, *, seed: int = 0,
+                 weighted: bool = False):
+        if cohort_size < 1:
+            raise ValueError("cohort_size must be >= 1")
+        self.sim = sim
+        self.cohort_size = cohort_size
+        self.seed = seed
+        self.weighted = weighted
+
+    def _confidences(self, alive: List[int]) -> Optional[np.ndarray]:
+        conf = getattr(self.sim, "confidence", None)
+        row_of = getattr(self.sim, "_row_of", None)
+        if conf is None or row_of is None:
+            return None
+        return np.asarray([conf[row_of[u]] for u in alive], dtype=np.float64)
+
+    def sample(self, round_index: int) -> Tuple[int, ...]:
+        alive = self.sim.alive_ids()
+        if len(alive) <= self.cohort_size:
+            return tuple(alive)
+        rng = np.random.default_rng([self.seed, round_index])
+        p = None
+        if self.weighted:
+            c = self._confidences(alive)
+            if c is not None and c.sum() > 0:
+                p = c / c.sum()
+        picked = rng.choice(len(alive), size=self.cohort_size,
+                            replace=False, p=p)
+        return tuple(sorted(alive[i] for i in picked))
+
+
+# --------------------------------------------------------------------------
+# The streaming loop
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CohortRoundRecord:
+    """One cohort round: membership motion + data-plane accounting."""
+
+    round: int
+    time: float
+    cohort_size: int
+    streamed_in: int
+    streamed_out: int
+    restored: int         # stream-ins that resumed a parked model
+    donor_seeded: int     # cold slots seeded by Fig-18 donor catch-up
+    fresh: int            # cold slots with no surviving donor
+    remap_ms: float       # host time for park/restore/schedule rebuild
+    retraces: int         # cumulative mixer retraces (must stay 0)
+
+
+class CohortStreamLoop:
+    """Train a (capacity, dim) resident population buffer against an
+    arbitrarily large overlay, one sampled cohort per round.
+
+    ``make_params(node_id) -> (dim,)`` initializes one node's flat model
+    the first time it is sampled.  ``local_fn`` (optional) is a
+    traced-through per-round local update ``(buf, mask) -> buf`` applied
+    before mixing (mask = 1 on occupied slots); it is jitted together
+    with the mixing round, so the whole round is one compiled program.
+
+    Stream-out **parks** a node's row host-side and stream-in restores
+    it — node identity is preserved across arbitrarily long absences
+    (the park grows with the number of *distinct* nodes ever sampled;
+    callers streaming truly huge populations should bound K·rounds or
+    snapshot-evict).  A node sampled for the first time is seeded by
+    Fig-18 donor catch-up: the highest-confidence cohort neighbor that
+    is itself a survivor/restored member donates its current model;
+    all-cold neighborhoods fall back to ``make_params``.
+    """
+
+    def __init__(self, sim, *, capacity: int, cohort_size: int,
+                 make_params: Callable[[int], np.ndarray],
+                 sampler: Optional[CohortSampler] = None,
+                 local_fn: Optional[Callable] = None,
+                 profiles_fn: Optional[Callable[
+                     [Tuple[int, ...]], Dict[int, ClientProfile]]] = None,
+                 round_time: float = 1.0, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        from ..kernels.weighted_mix import gather_mix
+
+        if cohort_size > capacity:
+            raise ValueError(f"cohort_size {cohort_size} exceeds "
+                             f"capacity {capacity}")
+        self.sim = sim
+        self.capacity = capacity
+        self.slots = SlotMap(capacity)
+        self.sampler = sampler or CohortSampler(sim, cohort_size, seed=seed)
+        self.make_params = make_params
+        self.profiles_fn = profiles_fn
+        self.round_time = round_time
+        self.salt = getattr(sim, "salt", "")
+        self.num_spaces = sim.num_spaces
+        self._jnp = jnp
+        self.park: Dict[int, np.ndarray] = {}
+        self.records: List[CohortRoundRecord] = []
+        self._round = 0
+
+        probe = self.sim.alive_ids()
+        if not probe:
+            raise ValueError("engine has no live nodes")
+        dim = int(np.asarray(make_params(probe[0])).shape[0])
+        self.dim = dim
+        self.buf = jnp.zeros((capacity, dim), dtype=jnp.float32)
+
+        def round_fn(buf, srcs, weights, mask):
+            if local_fn is not None:
+                buf = local_fn(buf, mask)
+            return gather_mix(buf, srcs, weights)
+        self._round_fn, self.trace_count = counting_jit(round_fn)
+
+    # ---- state access ----------------------------------------------------
+    def client_params(self, node_id: int) -> np.ndarray:
+        """A node's current model — live slot row if resident, parked
+        copy otherwise (identity preservation, testable)."""
+        slot = self.slots.slot_of.get(node_id)
+        if slot is not None:
+            return np.asarray(self.buf[slot])
+        return self.park[node_id]
+
+    # ---- one round -------------------------------------------------------
+    def _reconcile(self, cohort: Tuple[int, ...],
+                   sched: PermuteSchedule,
+                   plan: RemapPlan) -> Tuple[int, int, int]:
+        """Stream-out to the park, stream-in from park / donor / fresh.
+        Returns (restored, donor_seeded, fresh) counts."""
+        jnp = self._jnp
+        for u, s in plan.leavers:
+            self.park[u] = np.asarray(self.buf[s])
+        self.slots.apply(plan)
+        joiners = tuple(u for u, _ in plan.joiners)
+        if not joiners:
+            return 0, 0, 0
+        survivors = tuple(u for u, _ in plan.survivors)
+        cold = [u for u in joiners if u not in self.park]
+        # parked members count as warm donors: they resume their own
+        # model, so their row is as trustworthy as a survivor's
+        donors = joiner_donors(sched, cohort, cold,
+                               tuple(set(survivors)
+                                     | (set(joiners) - set(cold)))) \
+            if cold else {}
+        slot_of = self.slots.slot_of
+        restored = donor_seeded = fresh = 0
+        rows, slots_w = [], []
+        for u, s in plan.joiners:
+            if u in self.park:
+                rows.append(self.park.pop(u))
+                restored += 1
+            else:
+                donor = donors.get(u)
+                if donor is not None and donor in slot_of:
+                    rows.append(np.asarray(self.buf[slot_of[donor]]))
+                    donor_seeded += 1
+                else:
+                    rows.append(np.asarray(self.make_params(u),
+                                           dtype=np.float32))
+                    fresh += 1
+            slots_w.append(s)
+        idx = jnp.asarray(np.asarray(slots_w, dtype=np.int32))
+        self.buf = self.buf.at[idx].set(
+            jnp.asarray(np.stack(rows), dtype=self.buf.dtype))
+        return restored, donor_seeded, fresh
+
+    def run(self, num_rounds: int) -> List[CohortRoundRecord]:
+        jnp = self._jnp
+        for _ in range(num_rounds):
+            r = self._round
+            self.sim.advance(self.round_time)
+            cohort = self.sampler.sample(r)
+            t0 = _time.perf_counter()
+            plan = self.slots.plan(cohort)
+            profiles = (self.profiles_fn(cohort)
+                        if self.profiles_fn is not None else None)
+            sched, padded = cohort_schedule(
+                cohort, self.num_spaces, plan.slot_of, self.capacity,
+                salt=self.salt, profiles=profiles)
+            restored, donor_seeded, fresh = self._reconcile(
+                cohort, sched, plan)
+            srcs, weights = schedule_tables(padded)
+            mask = np.zeros((self.capacity,), dtype=np.float32)
+            mask[[plan.slot_of[u] for u in cohort]] = 1.0
+            remap_ms = (_time.perf_counter() - t0) * 1e3
+            self.buf = self._round_fn(self.buf, jnp.asarray(srcs),
+                                      jnp.asarray(weights),
+                                      jnp.asarray(mask))
+            self.records.append(CohortRoundRecord(
+                round=r, time=self.sim.now, cohort_size=len(cohort),
+                streamed_in=len(plan.joiners),
+                streamed_out=len(plan.leavers),
+                restored=restored, donor_seeded=donor_seeded, fresh=fresh,
+                remap_ms=remap_ms, retraces=self.trace_count.retraces))
+            self._round += 1
+        return self.records

@@ -157,3 +157,45 @@ def test_benchmarks_quick_sync_collectives_grouped_json():
         assert row["exact_mb_per_client"] <= bound + 1e-6
         if g > 1:
             assert row["exact_mb_per_client"] < bound
+
+
+def test_benchmarks_quick_fig20_json():
+    """fig20 through the --json path: both engines at small n with the
+    vec-vs-object parity row True, and comm rows including the cohort
+    active_clients closed form."""
+    res = _run("--only", "fig20", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    with open(os.path.join(REPO, "BENCH_fig20.json")) as f:
+        data = json.load(f)
+    assert not data["failed"] and data["quick"]
+    rows = data["rows"]
+    engines = {r["engine"] for r in rows if r["table"] == "fig20_protocol"}
+    assert engines == {"object", "vec"}
+    parity = [r for r in rows if r["table"] == "fig20_parity"]
+    assert parity and all(r["tables_equal"] for r in parity)
+    cohort = [r for r in rows if r["table"] == "fig20_comm"
+              and r["strategy"] == "fedlay_cohort"]
+    assert cohort and all(r["active_clients"] >= 1 for r in cohort)
+
+
+def test_benchmarks_quick_cohort_stream_json():
+    """The ISSUE 6 acceptance pins through the --json path: the device
+    cohort round equals the dense oracle within 1e-6 across >= 3 cohort
+    compositions with 0 retraces, and the K-sweep streaming rows also
+    never retrace."""
+    res = _run("--only", "cohort_stream", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    with open(os.path.join(REPO, "BENCH_cohort_stream.json")) as f:
+        data = json.load(f)
+    assert not data["failed"] and data["quick"]
+    rows = data["rows"]
+    oracle = [r for r in rows if r["table"] == "cohort_oracle"]
+    assert len(oracle) >= 4           # 3 compositions + full-vs-dense pin
+    assert all(r["within_1e6"] == 1 for r in oracle), oracle
+    assert all(r["retraces"] == 0 for r in oracle)
+    stream = [r for r in rows if r["table"] == "cohort_stream"]
+    assert len({r["k"] for r in stream}) >= 3
+    assert all(r["retraces"] == 0 for r in stream), stream
+    assert all(r["streamed_in"] ==
+               r["restored"] + r["donor_seeded"] + r["fresh"]
+               for r in stream)

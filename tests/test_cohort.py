@@ -1,0 +1,195 @@
+"""Cohort streaming (repro.scale.cohort): the induced-FedLay cohort
+round on the fixed-capacity buffer must equal the dense mixing-matrix
+oracle, reduce to full participation when the whole population is
+sampled, preserve node identity across stream-out/stream-in, seed cold
+members by Fig-18 donor catch-up, and never retrace the jitted round
+as cohort composition changes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mixing import schedule_from_addresses, schedule_mixing_matrix
+from repro.kernels.weighted_mix import gather_mix
+from repro.runtime.loop import counting_jit
+from repro.scale import CohortSampler, CohortStreamLoop, VectorSimulator
+from repro.scale.cohort import (cohort_addresses, cohort_mixing_matrix,
+                                cohort_schedule, schedule_tables)
+
+L = 3
+
+
+def make_sim(n):
+    sim = VectorSimulator(num_spaces=L, latency=0.05, heartbeat_period=0.5,
+                          probe_period=1.0)
+    sim.seed_network(range(n))
+    return sim
+
+
+class FixedSampler:
+    """Scripted cohorts — last entry repeats."""
+
+    def __init__(self, cohorts):
+        self.cohorts = [tuple(sorted(c)) for c in cohorts]
+
+    def sample(self, round_index):
+        return self.cohorts[min(round_index, len(self.cohorts) - 1)]
+
+
+def make_params(u):
+    return np.random.default_rng(u).random(16).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# The mixing round vs the dense oracle
+# --------------------------------------------------------------------------
+
+def test_gather_mix_traced_srcs_equals_dense_oracle():
+    """>= 3 cohort compositions through ONE jitted gather_mix: each
+    equals M @ buf within 1e-6, with zero retraces (the source table is
+    runtime data)."""
+    capacity, dim, n = 16, 64, 20
+    rng = np.random.default_rng(0)
+    buf = rng.random((capacity, dim), dtype=np.float32)
+    buf_j = jnp.asarray(buf)
+    mix, count = counting_jit(lambda b, s, w: gather_mix(b, s, w))
+    cohorts = [tuple(range(10)), tuple(range(5, 17)),
+               tuple(2 * k for k in range(8))]
+    for cohort in cohorts:
+        slot_of = {u: i for i, u in enumerate(cohort)}
+        _, padded = cohort_schedule(cohort, L, slot_of, capacity)
+        srcs, weights = schedule_tables(padded)
+        out = np.asarray(mix(buf_j, jnp.asarray(srcs), jnp.asarray(weights)))
+        oracle = cohort_mixing_matrix(cohort, L, slot_of, capacity) \
+            @ buf.astype(np.float64)
+        assert float(np.abs(out - oracle).max()) <= 1e-6
+    assert count.retraces == 0
+
+
+def test_full_population_cohort_is_full_participation():
+    """Sampling everyone gives exactly the dense full-participation
+    mixing matrix (identity on the spare dead slots)."""
+    n, capacity = 12, 16
+    cohort = tuple(range(n))
+    slot_of = {u: i for i, u in enumerate(cohort)}
+    M = cohort_mixing_matrix(cohort, L, slot_of, capacity)
+    dense = schedule_mixing_matrix(
+        schedule_from_addresses(cohort_addresses(cohort, L)))
+    np.testing.assert_array_equal(M[:n, :n], dense)
+    np.testing.assert_array_equal(M[n:, n:], np.eye(capacity - n))
+    np.testing.assert_array_equal(M[:n, n:], 0.0)
+    # row-stochastic restriction: live rows renormalize over the cohort
+    np.testing.assert_allclose(M.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_cohort_matrix_is_cohort_supported_and_stochastic():
+    cohort = (3, 8, 11, 25, 40, 41)
+    slot_of = {u: i for i, u in enumerate(cohort)}
+    M = cohort_mixing_matrix(cohort, L, slot_of, 8)
+    np.testing.assert_allclose(M.sum(axis=1), 1.0, atol=1e-12)
+    live = [slot_of[u] for u in cohort]
+    dead = [s for s in range(8) if s not in live]
+    np.testing.assert_array_equal(M[np.ix_(dead, dead)], np.eye(len(dead)))
+    np.testing.assert_array_equal(M[np.ix_(live, dead)], 0.0)
+
+
+# --------------------------------------------------------------------------
+# Sampler
+# --------------------------------------------------------------------------
+
+def test_sampler_deterministic_and_bounded():
+    sim = make_sim(100)
+    a = CohortSampler(sim, 10, seed=5)
+    b = CohortSampler(sim, 10, seed=5)
+    assert a.sample(3) == b.sample(3)
+    assert len(a.sample(0)) == 10
+    assert a.sample(0) != a.sample(1)      # fresh draw per round
+    small = CohortSampler(sim, 500, seed=5)
+    assert small.sample(0) == tuple(sim.alive_ids())   # K > population
+    with pytest.raises(ValueError):
+        CohortSampler(sim, 0)
+
+
+# --------------------------------------------------------------------------
+# The streaming loop
+# --------------------------------------------------------------------------
+
+def test_stream_out_parks_and_stream_in_restores_identity():
+    sim = make_sim(8)
+    cohorts = [(0, 1, 2, 3), (2, 3, 4, 5), (0, 1, 2, 3)]
+    loop = CohortStreamLoop(sim, capacity=4, cohort_size=4,
+                            make_params=make_params,
+                            sampler=FixedSampler(cohorts))
+    loop.run(1)
+    p0 = loop.client_params(0).copy()
+    loop.run(1)                    # 0 streamed out -> parked
+    assert 0 in loop.park
+    np.testing.assert_array_equal(loop.client_params(0), p0)
+    loop.run(1)                    # 0 streamed back in -> restored
+    assert 0 not in loop.park
+    r = loop.records[-1]
+    assert r.restored == 2 and r.fresh == 0       # 0 and 1 resume
+    assert loop.records[1].streamed_out == 2
+    # the restored row re-entered mixing from its own parked state:
+    # round 2's pre-mix value for node 0 was exactly p0
+    assert loop.trace_count.retraces == 0
+
+
+def test_cold_members_get_donor_catchup():
+    """Round 0: everyone is cold (fresh init).  Round 1: new members
+    joining a warm cohort are donor-seeded (Fig 18), not fresh."""
+    sim = make_sim(16)
+    cohorts = [(0, 1, 2, 3, 4, 5), (0, 1, 2, 3, 6, 7)]
+    loop = CohortStreamLoop(sim, capacity=6, cohort_size=6,
+                            make_params=make_params,
+                            sampler=FixedSampler(cohorts))
+    loop.run(2)
+    r0, r1 = loop.records
+    assert r0.fresh == 6 and r0.donor_seeded == 0
+    assert r1.streamed_in == 2
+    assert r1.donor_seeded == 2 and r1.fresh == 0
+    # accounting identity holds every round
+    for r in loop.records:
+        assert r.streamed_in == r.restored + r.donor_seeded + r.fresh
+
+
+def test_zero_retraces_across_compositions_and_churn():
+    """>= 3 distinct cohort compositions, plus engine churn between
+    rounds: still one compiled round program."""
+    sim = make_sim(200)
+    loop = CohortStreamLoop(sim, capacity=8, cohort_size=8,
+                            make_params=make_params, seed=11)
+    loop.run(2)
+    sim.fail_batch(range(5))
+    sim.join_batch(range(500, 505))
+    sim.run_for(30.0)
+    loop.run(2)
+    assert len({r.round for r in loop.records}) == 4
+    assert loop.records[-1].retraces == 0
+    assert loop.trace_count.traces == 1
+
+
+def test_loop_validates_capacity():
+    sim = make_sim(8)
+    with pytest.raises(ValueError, match="exceeds"):
+        CohortStreamLoop(sim, capacity=4, cohort_size=8,
+                         make_params=make_params)
+
+
+def test_loop_matches_dense_oracle_round_by_round():
+    """End-to-end: with a stable cohort (reconcile is a no-op after
+    round 0) every device round is exactly buf ← M @ buf for the dense
+    cohort mixing matrix M."""
+    sim = make_sim(10)
+    cohort = (0, 1, 2, 3, 4)
+    loop = CohortStreamLoop(sim, capacity=5, cohort_size=5,
+                            make_params=make_params,
+                            sampler=FixedSampler([cohort]))
+    loop.run(1)                    # seeds everyone, first mix
+    M = cohort_mixing_matrix(cohort, L, dict(loop.slots.slot_of), 5)
+    for _ in range(3):
+        before = np.asarray(loop.buf, dtype=np.float64)
+        loop.run(1)
+        after = np.asarray(loop.buf, dtype=np.float64)
+        assert float(np.abs(after - M @ before).max()) <= 1e-6
+    assert loop.trace_count.retraces == 0

@@ -412,3 +412,60 @@ def test_sync_bytes_tracks_exact_cross_edges(G):
             build_permute_schedule(n, L, salt=f"b{s}"), 1).cross_edges
             for s in range(8)]) / n
         assert np.mean(exact) < flat
+
+
+@pytest.mark.parametrize("G", GROUPS)
+def test_sync_bytes_cohort_active_clients_tracks_exact_edges(G):
+    """Cohort streaming accounting: with only K of n clients active the
+    fedlay closed form uses the cohort-induced degree min(2L, K-1) and
+    the packed-slot cross fraction (K-G)/(K-1).  Pinned against exact
+    cross-edge counts of capacity-padded cohort schedules (the SlotMap
+    packs the cohort into the lowest slots, which is exactly
+    ``pad_schedule(sched, range(K), K)``)."""
+    from repro.core.mixing import schedule_from_addresses
+    from repro.scale.cohort import cohort_addresses
+
+    n, L, mb = 200, 3, 1.0
+    K = 8 * G
+    rng = np.random.default_rng(G)
+    exact = []
+    for _ in range(8):
+        cohort = tuple(sorted(int(u) for u in
+                              rng.choice(n, size=K, replace=False)))
+        sched = schedule_from_addresses(cohort_addresses(cohort, L))
+        padded = pad_schedule(sched, list(range(K)), K)
+        rt = grouped_routing(padded, G)
+        assert rt.cross_edges <= min(2 * L, K - 1) * K
+        exact.append(rt.cross_edges * mb / K)
+    model = sync_bytes_per_client("fedlay", mb, n, L, clients_per_device=G,
+                                  active_clients=K)
+    # the closed form is the expectation of the exact count (which also
+    # dedups multi-space adjacencies), same band as full participation
+    assert np.mean(exact) <= model + 1e-9
+    assert np.mean(exact) >= 0.6 * model
+
+
+def test_sync_bytes_cohort_reduces_to_full_participation():
+    """active_clients=None and active_clients=n agree bit-for-bit on
+    every strategy, and tiny cohorts cap the fedlay degree at K-1."""
+    mb = 1_000_000
+    for strat in ("fedlay", "ring", "complete", "allreduce"):
+        for G in (1, 2, 4):
+            assert sync_bytes_per_client(strat, mb, 16, 3,
+                                         clients_per_device=G) == \
+                sync_bytes_per_client(strat, mb, 16, 3,
+                                      clients_per_device=G,
+                                      active_clients=16)
+    # K=4 cohort cannot realize 2L=6 distinct neighbors: degree = K-1
+    assert sync_bytes_per_client("fedlay", mb, 200, 3,
+                                 active_clients=4) == 3 * mb
+    # single-member or single-device cohorts cost zero wire bytes
+    assert sync_bytes_per_client("fedlay", mb, 200, 3,
+                                 active_clients=1) == 0.0
+    assert sync_bytes_per_client("fedlay", mb, 200, 3, clients_per_device=8,
+                                 active_clients=8) == 0.0
+    # K=8 cohort packed 2/device: ring over D_K=4 devices, 2·D_K/K·model
+    assert sync_bytes_per_client("ring", mb, 200, clients_per_device=2,
+                                 active_clients=8) == mb
+    with pytest.raises(ValueError, match="active_clients"):
+        sync_bytes_per_client("fedlay", mb, 16, 3, active_clients=17)
