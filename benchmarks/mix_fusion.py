@@ -1,6 +1,6 @@
 """ISSUE 5 microbenchmark: flat-buffer fused mixing vs the tree walk.
 
-Four sections, one per acceptance claim:
+Five sections, one per acceptance claim:
 
 * ``mix_fusion_parity`` — the fused global mixer ≡ the dense
   ``masked_mixing_matrix`` / ``schedule_mixing_matrix`` oracle for
@@ -18,7 +18,14 @@ Four sections, one per acceptance claim:
   identical wire bytes — and the per-round wall time follows
   (interleaved medians, ``speedup = tree_ms / flat_ms``);
 * ``mix_fusion_memory`` — XLA ``memory_analysis`` temp bytes for the
-  two compiled global programs, when the backend reports it.
+  two compiled global programs, when the backend reports it;
+* ``mix_fusion_codec`` (also runnable alone via ``--codec``) — the wire
+  axis: one shard_map FedLay round per :mod:`repro.wire.codec` codec,
+  HLO-measured collective-permute bytes per device next to the codec's
+  ``wire_bytes`` closed form, per-round wall time, and the reduction
+  factors vs the uncompressed ``fuse="flat"`` round (``wire_reduction``
+  counts everything on the wire including per-block scales;
+  ``payload_reduction`` the value payload alone).
 
 Caveat for reading the timing on CPU: XLA already loop-fuses the
 *global-view* tree walk into near-optimal single-pass code on one
@@ -91,6 +98,86 @@ _ROUND_PROBE = textwrap.dedent("""
     for row in rows:
         row["per_round_ms"] = round(
             float(np.median(ts[row["path"]])) * 1e3, 3)
+    print(json.dumps(rows))
+""")
+
+
+_CODEC_PROBE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys, time
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.mixing import build_permute_schedule
+    from repro.dist.compat import make_client_mesh, shard_map
+    from repro.dist.flat import FlatSpec
+    from repro.dist.sync import make_mixer
+    from repro.launch.hlo_stats import collective_stats
+    from repro.wire.codec import get_codec
+
+    cfg = json.loads(sys.argv[1])
+    L, T, leaf, reps = cfg["spaces"], cfg["leaves"], cfg["leaf"], cfg["reps"]
+    n = 8
+    mesh = make_client_mesh(n, "data")
+    shard = NamedSharding(mesh, P("data"))
+    sched = build_permute_schedule(n, L, salt="mix_fusion")
+    rng = np.random.default_rng(0)
+    tree = {f"l{i}": jax.device_put(
+        jnp.asarray(rng.normal(size=(n, leaf)).astype(np.float32)), shard)
+        for i in range(T)}
+    W = jax.device_put(jnp.asarray(sched.weights), shard)
+    S = jax.device_put(jnp.asarray(sched.self_weight), shard)
+    specs = jax.tree.map(lambda _: P("data"), tree)
+    nflat = FlatSpec.for_tree(tree).size
+    res0 = jax.device_put(jnp.zeros((n, nflat), jnp.float32),
+                          NamedSharding(mesh, P("data", None)))
+
+    rows, progs, efs = [], {}, {}
+    for name in cfg["codecs"]:
+        codec = get_codec(name)
+        ef = codec is not None and codec.error_feedback
+        mixer = make_mixer("fedlay", sched, "data", n, fuse="flat",
+                           codec=name)
+        if ef:
+            f = jax.jit(shard_map(
+                lambda t, w, s, r, mixer=mixer: mixer(t, w, s, r),
+                mesh=mesh,
+                in_specs=(specs, P("data"), P("data"), P("data", None)),
+                out_specs=(specs, P("data", None)), check_vma=False))
+            hlo = f.lower(tree, W, S, res0).compile().as_text()
+        else:
+            f = jax.jit(shard_map(
+                lambda t, w, s, mixer=mixer: mixer(t, w, s), mesh=mesh,
+                in_specs=(specs, P("data"), P("data")), out_specs=specs,
+                check_vma=False))
+            hlo = f.lower(tree, W, S).compile().as_text()
+        st = collective_stats(hlo)
+        cname = name if name is not None else "uncompressed"
+        wire = (codec or get_codec("none"))
+        rows.append({
+            "codec": cname,
+            "ppermutes": st.counts.get("collective-permute", 0),
+            "wire_mb": round(st.wire_bytes_per_device / 1e6, 4),
+            "predicted_wire_mb": round(
+                2 * L * wire.wire_bytes(nflat) / 1e6, 4),
+            "payload_mb": round(
+                2 * L * wire.payload_bytes(nflat) / 1e6, 4)})
+        progs[cname], efs[cname] = f, ef
+
+    ts = {k: [] for k in progs}
+    call = lambda k: (progs[k](tree, W, S, res0) if efs[k]
+                      else progs[k](tree, W, S))
+    for k in progs:
+        jax.block_until_ready(call(k))
+    for _ in range(reps):                   # interleaved: shared drift
+        for k in progs:
+            t0 = time.perf_counter()
+            jax.block_until_ready(call(k))
+            ts[k].append(time.perf_counter() - t0)
+    for row in rows:
+        row["per_round_ms"] = round(
+            float(np.median(ts[row["codec"]])) * 1e3, 3)
     print(json.dumps(rows))
 """)
 
@@ -231,14 +318,50 @@ def _memory_section(quick: bool) -> None:
             if temp >= 0 else -1)
 
 
+def _codec_section(quick: bool) -> None:
+    cfg = {"spaces": 3, "leaves": 12 if quick else 48,
+           "leaf": 512 if quick else 4096, "reps": 5 if quick else 15,
+           "codecs": [None, "bf16", "int8-block", "int4-block", "topk"]}
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)              # the probe forces its own
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    src = os.path.join(repo, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-c", _CODEC_PROBE, json.dumps(cfg)],
+        env=env, capture_output=True, text=True, timeout=600)
+    if res.returncode != 0:
+        raise RuntimeError(f"codec probe failed:\n{res.stderr[-2000:]}")
+    rows = json.loads(res.stdout.strip().splitlines()[-1])
+    base = next(r for r in rows if r["codec"] == "uncompressed")
+    for r in rows:
+        emit("mix_fusion_codec", spaces=cfg["spaces"],
+             leaves=cfg["leaves"], leaf_dim=cfg["leaf"],
+             codec=r["codec"], ppermutes=r["ppermutes"],
+             wire_mb=r["wire_mb"],
+             predicted_wire_mb=r["predicted_wire_mb"],
+             per_round_ms=r["per_round_ms"],
+             wire_reduction=round(
+                 base["wire_mb"] / r["wire_mb"], 2)
+             if r["wire_mb"] > 0 else -1,
+             payload_reduction=round(
+                 base["payload_mb"] / r["payload_mb"], 2)
+             if r["payload_mb"] > 0 else -1)
+
+
 def run(quick: bool = False) -> None:
     t0 = time.time()
     _parity_section(quick)
     _temps_section(quick)
     _round_section(quick)
     _memory_section(quick)
+    _codec_section(quick)
     emit("mix_fusion_done", seconds=round(time.time() - t0, 1))
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv)
+    if "--codec" in sys.argv:
+        _codec_section(quick="--quick" in sys.argv)
+    else:
+        run(quick="--quick" in sys.argv)

@@ -100,10 +100,14 @@ def _append_history(name: str, *, quick: bool, seconds: float, failed: bool,
 
 def perf_direction(key: str) -> Optional[int]:
     """+1: higher is better; -1: lower is better; None: not a perf
-    field (identity or accuracy data, never gated)."""
-    if key == "seconds" or key.endswith("_ms"):
+    field (identity or accuracy data, never gated).  Bytes-on-the-wire
+    fields (``*_bytes``, ``*_mb``) are lower-is-better; compression
+    ratios (``*_reduction``) higher-is-better."""
+    if (key == "seconds" or key.endswith("_ms") or key.endswith("_bytes")
+            or key.endswith("_mb")):
         return -1
-    if key == "speedup" or key.endswith("_per_s"):
+    if (key == "speedup" or key.endswith("_per_s")
+            or key.endswith("_reduction")):
         return +1
     return None
 

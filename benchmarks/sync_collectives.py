@@ -10,6 +10,13 @@ the flat-layout 2L·model bound.  Each row carries the analytic
 prediction (``sync_bytes_per_client`` grouped accounting) next to the
 HLO-measured bytes so the model and the compiler stay reconciled.
 
+ISSUE 7 adds the wire-codec axis (``sync_collectives_codec`` rows):
+one fedlay ``fuse="flat"`` round per :mod:`repro.wire.codec` codec,
+pinning the codec-aware ``sync_bytes_per_client(..., codec=)`` closed
+form against the HLO-measured collective-permute bytes (the small
+residual gap is the FlatSpec 128-lane padding, which the closed form
+prices at the unpadded element count).
+
   PYTHONPATH=src python -m benchmarks.sync_collectives \
       [--clients-per-device 1,2,4] [--quick]
 """
@@ -75,7 +82,51 @@ _PROBE = textwrap.dedent("""
                 row["cross_edges"] = rt.cross_edges
                 row["ppermute_rounds_max"] = rt.max_rounds
             out.append(row)
-    print(json.dumps(out))
+
+    # wire-codec axis: fedlay flat round per codec, G = 1
+    from repro.dist.flat import FlatSpec
+    from repro.wire.codec import get_codec
+    codec_rows = []
+    n = devices
+    sched = build_permute_schedule(n, spaces)
+    nflat = FlatSpec.for_tree(
+        {"m": jax.ShapeDtypeStruct((1, dim), jnp.float32)}).size
+    w_sds = jax.ShapeDtypeStruct((n, 2 * spaces), jnp.float32)
+    s_sds = jax.ShapeDtypeStruct((n,), jnp.float32)
+    x_sds = jax.ShapeDtypeStruct((n, dim), jnp.float32)
+    for name in cfg.get("codecs", []):
+        codec = get_codec(name)
+        ef = codec is not None and codec.error_feedback
+        mixer = make_mixer("fedlay", sched, "data", n, fuse="flat",
+                           codec=name)
+        if ef:
+            def body_ef(x, w, s, r, mixer=mixer):
+                out_t, r = mixer({"m": x}, w, s, r)
+                return out_t["m"], r
+            f = jax.jit(shard_map(
+                body_ef, mesh=mesh,
+                in_specs=(P("data"), P("data"), P("data"),
+                          P("data", None)),
+                out_specs=(P("data"), P("data", None)), check_vma=False))
+            lowered = f.lower(x_sds, w_sds, s_sds,
+                              jax.ShapeDtypeStruct((n, nflat),
+                                                   jnp.float32))
+        else:
+            def body_c(x, w, s, mixer=mixer):
+                return mixer({"m": x}, w, s)["m"]
+            f = jax.jit(shard_map(
+                body_c, mesh=mesh,
+                in_specs=(P("data"), P("data"), P("data")),
+                out_specs=P("data"), check_vma=False))
+            lowered = f.lower(x_sds, w_sds, s_sds)
+        st = collective_stats(lowered.compile().as_text())
+        codec_rows.append({
+            "codec": name if name is not None else "uncompressed",
+            "wire_bytes_per_dev": st.wire_bytes_per_device,
+            "predicted_bytes_per_client": sync_bytes_per_client(
+                "fedlay", 4 * dim, n, spaces, codec=name),
+            "counts": st.counts})
+    print(json.dumps({"rows": out, "codec_rows": codec_rows}))
 """)
 
 
@@ -83,7 +134,8 @@ def run(quick: bool = False,
         clients_per_device: Sequence[int] = ()) -> None:
     groups = list(clients_per_device) or ([1, 2] if quick else [1, 2, 4])
     cfg = {"dim": 250_000 if quick else 1_000_000,
-           "spaces": 3, "groups": groups}
+           "spaces": 3, "groups": groups,
+           "codecs": [None, "bf16", "int8-block", "int4-block", "topk"]}
     env = dict(os.environ)
     env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
     env.pop("XLA_FLAGS", None)
@@ -95,7 +147,8 @@ def run(quick: bool = False,
              .replace("\n", " "))
         return
     data = json.loads(res.stdout.strip().splitlines()[-1])
-    for row in data:
+    codec_rows = data["codec_rows"]
+    for row in data["rows"]:
         extra = {}
         if "cross_edges" in row:
             # exact per-client wire bytes for this schedule: one model
@@ -117,6 +170,17 @@ def run(quick: bool = False,
                  row["model_bytes_per_client"] / 1e6, 2),
              ops="+".join(f"{k}:{v}" for k, v in row["counts"].items()),
              **extra)
+    base = next(r for r in codec_rows if r["codec"] == "uncompressed")
+    for row in codec_rows:
+        emit("sync_collectives_codec", strategy="fedlay",
+             clients=8, codec=row["codec"],
+             wire_mb_per_dev=round(row["wire_bytes_per_dev"] / 1e6, 3),
+             predicted_mb_per_client=round(
+                 row["predicted_bytes_per_client"] / 1e6, 3),
+             wire_reduction=round(base["wire_bytes_per_dev"]
+                                  / row["wire_bytes_per_dev"], 2)
+             if row["wire_bytes_per_dev"] > 0 else -1,
+             ops="+".join(f"{k}:{v}" for k, v in row["counts"].items()))
 
 
 def main() -> None:

@@ -85,7 +85,8 @@ class FlatSpec:
                 raise ValueError(
                     f"leaf {i} shape {shape} does not carry the shared "
                     f"leading batch dim {batch}")
-            dt = jnp.dtype(jnp.result_type(leaf))
+            dt = jnp.dtype(getattr(leaf, "dtype", None)
+                           or jnp.result_type(leaf))
             if (not jnp.issubdtype(dt, jnp.floating)
                     or jnp.finfo(dt).bits > jnp.finfo(buf_dt).bits):
                 raise ValueError(

@@ -80,6 +80,7 @@ import numpy as np
 
 from ..core.mixing import PermuteSchedule, check_group_size, grouped_routing
 from ..kernels.weighted_mix import gather_mix, mix_accumulate
+from ..wire.codec import WireCodec, get_codec
 from .flat import FlatSpec
 
 #: Sync strategies understood by both mixer factories.
@@ -97,6 +98,21 @@ def check_fuse(fuse: Optional[str]) -> Optional[str]:
         raise ValueError(
             f"unknown fuse mode {fuse!r}; choose from {FUSE_MODES}")
     return None if fuse == "tree" else fuse
+
+
+def resolve_wire(codec, fuse: Optional[str]
+                 ) -> "tuple[Optional[WireCodec], Optional[str]]":
+    """Normalize the ``(codec, fuse)`` knob pair shared by every mixing
+    entry point.  Codecs operate on the flat row buffer
+    (:mod:`repro.wire.codec` wire-format contract), so any codec —
+    including the exact ``"none"`` — implies ``fuse="flat"``; without a
+    codec the fuse mode passes through unchanged (``None`` stays the
+    tree walk, byte-identical to pre-codec behavior)."""
+    fuse = check_fuse(fuse)
+    codec = get_codec(codec)
+    if codec is not None:
+        fuse = "flat"
+    return codec, fuse
 
 
 def ring_schedule(num_clients: int) -> PermuteSchedule:
@@ -125,7 +141,8 @@ def ring_schedule(num_clients: int) -> PermuteSchedule:
 def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
                self_weight: jnp.ndarray, axis_name: str,
                mask: Optional[jnp.ndarray] = None,
-               fuse: Optional[str] = None):
+               fuse: Optional[str] = None,
+               codec=None, residual: Optional[jnp.ndarray] = None):
     """One FedLay mixing round inside ``shard_map``.
 
     ``tree`` leaves carry a leading local-client dim of size G (the
@@ -159,8 +176,29 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
     :func:`~repro.kernels.weighted_mix.mix_accumulate` accumulator —
     same routing, same weights, same mask semantics, O(1) live
     full-model temporaries instead of one per leaf per slot.
+
+    ``codec`` (a :mod:`repro.wire.codec` name or instance; implies the
+    flat path) compresses the wire: each slot's receive routes the
+    *encoded* parts of the own flat row — int8 payload + per-block
+    scales, or top-k (values, indices) — through exactly the same
+    ppermute/grouped routing, and the receive folds them into the f32
+    accumulator via the codec's fused
+    :meth:`~repro.wire.codec.WireCodec.accumulate` (the decompressed 2L
+    stack never exists).  The self term always uses the true local row
+    (it is never on the wire), so exact codecs reproduce the
+    uncompressed round bit-for-bit and lossy ones stay within the
+    codec's documented per-element tolerance of the dense oracle.  For
+    an error-feedback codec, ``residual`` ((G, N) f32) is required and
+    the call returns ``(tree, new_residual)``: the wire carries
+    ``enc(buf + residual)``; masked-out rows keep their residual
+    unchanged (they send nothing anyone counts).
     """
-    fuse = check_fuse(fuse)
+    codec, fuse = resolve_wire(codec, fuse)
+    ef = codec is not None and codec.error_feedback
+    if ef and residual is None:
+        raise ValueError(
+            f"codec {codec.name!r} uses error feedback; pass the (G, N) "
+            f"residual state (and consume the returned new residual)")
     G = jax.tree.leaves(tree)[0].shape[0]
     # psum of a literal is evaluated statically under shard_map tracing,
     # so a schedule/mesh layout mismatch fails loudly at trace time
@@ -214,6 +252,25 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
     if fuse == "flat":
         spec = FlatSpec.for_tree(tree)
         buf = spec.ravel(tree)                       # (G, N) lane-padded
+        if codec is not None:
+            if ef:
+                if residual.shape != buf.shape:
+                    raise ValueError(
+                        f"residual shape {residual.shape} != flat buffer "
+                        f"{buf.shape}")
+                wire, res = codec.encode_ef(buf + residual)
+                if masked:
+                    res = jnp.where((m > 0)[:, None], res, residual)
+            else:
+                wire, res = codec.encode(buf), None
+            acc = mix_accumulate(None, buf, self_w)
+            for k in range(sched.num_slots):
+                wk = tuple(receive(part, k) for part in wire)
+                acc = codec.accumulate(acc, wk, slot_w[k])
+            if masked:
+                acc = jnp.where(ok[:, None], acc, buf)
+            out = spec.unravel(acc)
+            return (out, res) if ef else out
         acc = mix_accumulate(None, buf, self_w)
         for k in range(sched.num_slots):
             acc = mix_accumulate(acc, receive(buf, k), slot_w[k])
@@ -238,7 +295,8 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
 def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
                axis_name: str, num_clients: int,
                clients_per_device: int = 1,
-               fuse: Optional[str] = None) -> Callable:
+               fuse: Optional[str] = None,
+               codec=None) -> Callable:
     """Build a ``shard_map``-body mixer ``(tree, weights, self_w) -> tree``
     for one sync strategy over the client axis ``axis_name``.
 
@@ -248,6 +306,13 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
     module-level contract).  ``fuse="flat"`` selects the flat-buffer
     fused hot path for the fedlay/ring rounds (module docstring);
     allreduce/none have no per-slot accumulate to fuse and ignore it.
+
+    ``codec`` (:mod:`repro.wire.codec`) compresses the fedlay/ring
+    gossip wire (implies ``fuse="flat"``; see :func:`fedlay_mix`).  For
+    an error-feedback codec the mixer signature grows a trailing
+    residual: ``(tree, weights, self_w, residual) -> (tree, residual)``.
+    allreduce reduces in-network (no per-neighbor wire to compress) and
+    none sends nothing, so both ignore ``codec``.
 
     * ``fedlay``   — static ppermutes from ``sched`` (paper §III); with
       G > 1, intra-device sub-mixing + edge-colored cross-device rounds;
@@ -259,7 +324,9 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
     """
     G = clients_per_device
     check_group_size(num_clients, G)
-    fuse = check_fuse(fuse)
+    codec, fuse = resolve_wire(codec, fuse)
+    ef = (codec is not None and codec.error_feedback
+          and strategy in ("fedlay", "ring"))
 
     if strategy == "none":
         return lambda tree, weights, self_w: tree
@@ -278,11 +345,21 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
         ring_w = jnp.asarray(ring.weights)
         ring_s = jnp.asarray(ring.self_weight)
 
+        if ef:
+            def ring_mixer_ef(tree, weights, self_w, residual):
+                i = jax.lax.axis_index(axis_name)
+                w = jax.lax.dynamic_slice_in_dim(ring_w, i * G, G, axis=0)
+                s = jax.lax.dynamic_slice_in_dim(ring_s, i * G, G, axis=0)
+                return fedlay_mix(tree, ring, w, s, axis_name, fuse=fuse,
+                                  codec=codec, residual=residual)
+            return ring_mixer_ef
+
         def ring_mixer(tree, weights, self_w):
             i = jax.lax.axis_index(axis_name)
             w = jax.lax.dynamic_slice_in_dim(ring_w, i * G, G, axis=0)
             s = jax.lax.dynamic_slice_in_dim(ring_s, i * G, G, axis=0)
-            return fedlay_mix(tree, ring, w, s, axis_name, fuse=fuse)
+            return fedlay_mix(tree, ring, w, s, axis_name, fuse=fuse,
+                              codec=codec)
         return ring_mixer
 
     if strategy == "fedlay":
@@ -293,8 +370,12 @@ def make_mixer(strategy: str, sched: Optional[PermuteSchedule],
                 f"schedule is for {sched.num_clients} clients, "
                 f"mesh axis {axis_name!r} holds {num_clients} "
                 f"(= {num_clients // G} devices × {G})")
+        if ef:
+            return lambda tree, weights, self_w, residual: fedlay_mix(
+                tree, sched, weights, self_w, axis_name, fuse=fuse,
+                codec=codec, residual=residual)
         return lambda tree, weights, self_w: fedlay_mix(
-            tree, sched, weights, self_w, axis_name, fuse=fuse)
+            tree, sched, weights, self_w, axis_name, fuse=fuse, codec=codec)
 
     raise ValueError(
         f"unknown sync strategy {strategy!r}; choose from {SYNC_STRATEGIES}")
@@ -304,7 +385,9 @@ def global_mixer(strategy: str,
                  sched: Optional[PermuteSchedule] = None,
                  masked: bool = False,
                  clients_per_device: int = 1,
-                 fuse: Optional[str] = None) -> Callable:
+                 fuse: Optional[str] = None,
+                 codec=None,
+                 flat_io: bool = False) -> Callable:
     """Build a global-view mixer ``params -> params`` over the leading
     client axis (for auto-sharded jit, e.g. ``dfl_train_bundle``).
 
@@ -338,8 +421,34 @@ def global_mixer(strategy: str,
     surviving sources, identity rows for dead/starved clients — so the
     mask stays a zero-retrace runtime input.  allreduce/none have no
     per-slot accumulate to fuse and ignore ``fuse``.
+
+    ``codec`` (:mod:`repro.wire.codec`; implies ``fuse="flat"``)
+    compresses the fedlay/ring round: the population buffer is encoded
+    once per round and the neighbor term mixes the *encoded* form
+    through the codec's fused
+    :meth:`~repro.wire.codec.WireCodec.gather` (int8: the
+    :func:`repro.kernels.wire_codec.gather_mix_int8` round-matrix
+    kernel dequantizing tiles in VMEM), while the self term always uses
+    the true row.  For an error-feedback codec the signature grows a
+    trailing (C, N) f32 residual and returns ``(params, residual)``
+    (masked rows keep their residual).  allreduce/none ignore ``codec``
+    (no per-neighbor wire).
+
+    ``flat_io=True`` (fedlay/ring flat path only) makes the mixer
+    operate **directly on the (C, N) flat buffer** instead of a params
+    tree — the resident-flat-params mode of
+    :class:`repro.runtime.SlotTrainLoop`, which keeps the population
+    raveled across steps so steady-state training never pays per-round
+    ravel/unravel copies.  Same signatures with ``params`` replaced by
+    the buffer.
     """
-    fuse = check_fuse(fuse)
+    codec, fuse = resolve_wire(codec, fuse)
+    if flat_io:
+        if fuse != "flat" or strategy not in ("fedlay", "ring"):
+            raise ValueError(
+                "flat_io mixers operate on the raveled buffer: they "
+                "require fuse='flat' (or a codec) and a fedlay/ring "
+                "strategy")
     if sched is not None:
         check_group_size(sched.num_clients, clients_per_device)
     elif clients_per_device < 1:
@@ -399,22 +508,70 @@ def global_mixer(strategy: str,
                 [np.arange(C)[:, None], np.array(sched.perms).T], axis=1)
             base_table = jnp.concatenate(
                 [self_w[:, None], weights], axis=1).astype(jnp.float32)
+            ef = codec is not None and codec.error_feedback
 
-            def mix_flat(params):
-                spec = FlatSpec.for_tree(params)
-                return spec.unravel(
-                    gather_mix(spec.ravel(params), srcs, base_table))
+            def round_flat(buf, table, ok=None, residual=None):
+                """One fused round on the (C, N) buffer → (out, res).
+                Codec-free: one gather_mix over the full table (identity
+                rows where ~ok).  With a codec: the self column uses the
+                true rows, neighbors mix the encoded buffer through the
+                codec's fused gather; EF encodes buf+residual and
+                returns the fresh residual (mask-gating is the
+                caller's)."""
+                if codec is None:
+                    if ok is not None:
+                        ident = jnp.zeros_like(table).at[:, 0].set(1.0)
+                        table = jnp.where(ok[:, None], table, ident)
+                    return gather_mix(buf, srcs, table), None
+                if ef:
+                    wire, res = codec.encode_ef(buf + residual)
+                else:
+                    wire, res = codec.encode(buf), None
+                out = mix_accumulate(None, buf, table[:, 0])
+                out = out + codec.gather(wire, srcs[:, 1:], table[:, 1:],
+                                         buf.shape[1])
+                if ok is not None:
+                    out = jnp.where(ok[:, None], out, buf)
+                return out, res
 
-            def mix_flat_masked(params, mask):
+            def mix_buf(buf):
+                return round_flat(buf, base_table)[0]
+
+            def mix_buf_masked(buf, mask):
                 sw, ew, ok = masked_tables(mask)
                 table = jnp.concatenate([sw[:, None], ew], axis=1)
-                # dead or fully starved rows: identity = self-only row
-                ident = jnp.zeros_like(table).at[:, 0].set(1.0)
-                table = jnp.where(ok[:, None], table, ident)
+                return round_flat(buf, table, ok=ok)[0]
+
+            def mix_buf_ef(buf, residual):
+                return round_flat(buf, base_table, residual=residual)
+
+            def mix_buf_masked_ef(buf, mask, residual):
+                sw, ew, ok = masked_tables(mask)
+                table = jnp.concatenate([sw[:, None], ew], axis=1)
+                out, res = round_flat(buf, table, ok=ok, residual=residual)
+                # masked-out rows (dead slots, multirate skips) keep
+                # their residual: they contributed nothing this round
+                res = jnp.where((mask > 0)[:, None], res, residual)
+                return out, res
+
+            inner = {(False, False): mix_buf,
+                     (True, False): mix_buf_masked,
+                     (False, True): mix_buf_ef,
+                     (True, True): mix_buf_masked_ef}[(masked, ef)]
+            if flat_io:
+                return inner
+
+            if ef:
+                def mix_flat_ef(params, *rest):
+                    spec = FlatSpec.for_tree(params)
+                    out, res = inner(spec.ravel(params), *rest)
+                    return spec.unravel(out), res
+                return mix_flat_ef
+
+            def mix_flat(params, *rest):
                 spec = FlatSpec.for_tree(params)
-                return spec.unravel(
-                    gather_mix(spec.ravel(params), srcs, table))
-            return mix_flat_masked if masked else mix_flat
+                return spec.unravel(inner(spec.ravel(params), *rest))
+            return mix_flat
 
         def mix(params):
             def mix_leaf(leaf):
@@ -448,7 +605,8 @@ def global_mixer(strategy: str,
 def sync_bytes_per_client(strategy: str, model_bytes: int, num_clients: int,
                           num_spaces: Optional[int] = None,
                           clients_per_device: int = 1,
-                          active_clients: Optional[int] = None) -> float:
+                          active_clients: Optional[int] = None,
+                          codec=None) -> float:
     """*Network* bytes each **active** client sends per mixing round
     (paper §IV-D accounting).  With the grouped layout
     (``clients_per_device = G``) edges between clients co-hosted on one
@@ -482,9 +640,20 @@ def sync_bytes_per_client(strategy: str, model_bytes: int, num_clients: int,
       devices, amortized over the active clients per device:
       ``2·(D_K−1)/D_K · D_K/K · model_bytes``;
     * ``none``: no communication.
+
+    ``codec`` (a name or :class:`repro.wire.codec.WireCodec`) replaces
+    the gossip payload with its wire image: ``model_bytes`` is
+    interpreted as the f32 flat row (``model_bytes / 4`` elements) and
+    every peer-to-peer strategy (fedlay / ring / complete) ships
+    ``codec.wire_bytes(elements)`` instead.  ``allreduce`` ignores the
+    codec — in-network reduction has no per-edge wire image to
+    compress.
     """
     n, G = num_clients, clients_per_device
     check_group_size(n, G)
+    codec = get_codec(codec)
+    if codec is not None and strategy in ("fedlay", "ring", "complete"):
+        model_bytes = codec.wire_bytes(int(round(model_bytes / 4.0)))
     K = n if active_clients is None else int(active_clients)
     if not 1 <= K <= n:
         raise ValueError(f"active_clients {K} out of range for "

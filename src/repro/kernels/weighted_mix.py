@@ -194,6 +194,27 @@ def mix_accumulate(acc: Optional[jnp.ndarray], x: jnp.ndarray,
     return out[:, :N]
 
 
+def round_matrix(C: int, srcs, weights: jnp.ndarray) -> jnp.ndarray:
+    """Scatter a (C, K1) ``(srcs, weights)`` gather table into the dense
+    (C, C) round-mixing matrix ``W[i, srcs[i, k]] += weights[i, k]``
+    (duplicate sources add).  ``srcs`` host-static (validated eagerly)
+    or traced (the cohort-streaming case) — shared by
+    :func:`gather_mix` and the int8 wire-codec sibling
+    :func:`repro.kernels.wire_codec.gather_mix_int8`."""
+    static_srcs = not isinstance(srcs, jax.core.Tracer)
+    if static_srcs:
+        srcs = np.asarray(srcs, np.int64)
+        if srcs.min() < 0 or srcs.max() >= C:
+            raise ValueError(f"source rows out of range for {C} clients")
+    if srcs.shape[0] != C or weights.shape != srcs.shape:
+        raise ValueError(
+            f"srcs {srcs.shape} / weights {weights.shape} do not match "
+            f"{(C,)} clients")
+    rows = np.broadcast_to(np.arange(C)[:, None], srcs.shape)
+    return jnp.zeros((C, C), jnp.float32).at[rows, srcs].add(
+        weights.astype(jnp.float32))
+
+
 def _gather_mix_kernel(W_ref, models_ref, out_ref):
     # W: (C, C) round-mixing matrix (stationary across tiles);
     # models: (C, BN) — the whole population's column tile, read once
@@ -242,22 +263,11 @@ def gather_mix(buf: jnp.ndarray, srcs, weights: jnp.ndarray,
     C, N = buf.shape
     if block_n is None:
         block_n = _default_block_n(N, C, interp)
-    static_srcs = not isinstance(srcs, jax.core.Tracer)
-    if static_srcs:
-        srcs = np.asarray(srcs, np.int64)
-        if srcs.min() < 0 or srcs.max() >= C:
-            raise ValueError(f"source rows out of range for {C} clients")
-    if srcs.shape[0] != C or weights.shape != srcs.shape:
-        raise ValueError(
-            f"srcs {srcs.shape} / weights {weights.shape} do not match "
-            f"{(C,)} clients")
+    W = round_matrix(C, srcs, weights)
     bn = aligned_block_n(N, block_n)
     pad = (-N) % bn
     bufs = jnp.pad(buf, ((0, 0), (0, pad))) if pad else buf
     Np = bufs.shape[1]
-    rows = np.broadcast_to(np.arange(C)[:, None], srcs.shape)
-    W = jnp.zeros((C, C), jnp.float32).at[rows, srcs].add(
-        weights.astype(jnp.float32))
 
     out = pl.pallas_call(
         _gather_mix_kernel,

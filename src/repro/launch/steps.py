@@ -215,7 +215,8 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      sched: Optional[PermuteSchedule] = None,
                      masked: bool = False,
                      clients_per_device: int = 1,
-                     fuse: Optional[str] = None) -> StepBundle:
+                     fuse: Optional[str] = None,
+                     codec=None) -> StepBundle:
     """``sched`` overrides the internally built overlay schedule, e.g.
     to bake an :class:`repro.overlay.OverlayController`'s converged NDMP
     schedule into a static bundle; when None the static overlay over
@@ -246,7 +247,15 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     lane-padded (C, N) buffer and the whole round runs as one Pallas
     :func:`repro.kernels.weighted_mix.gather_mix` kernel
     (:func:`repro.dist.sync.global_mixer` ``fuse`` docs; masked rounds
-    stay zero-retrace runtime-mask programs)."""
+    stay zero-retrace runtime-mask programs).
+
+    ``codec`` (a :mod:`repro.wire.codec` name or instance) compresses
+    the fedlay/ring gossip wire (implies ``fuse="flat"``).  For an
+    **error-feedback** codec the step signature grows a trailing
+    (C, N) f32 ``residual`` arg and returns the fresh residual —
+    ``in_specs``/``arg_shapes``/``out_specs`` all carry the extra leaf,
+    sharded over the client axis like every capacity-stacked row.
+    allreduce/none sync ignores the codec."""
     from ..core.mixing import build_permute_schedule
     from ..data.tokens import input_specs as data_specs
     if sync not in SYNC_STRATEGIES:
@@ -279,7 +288,12 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     elif sync == "ring":
         sched = ring_schedule(C)
     mix = global_mixer(sync, sched, masked=masked,
-                       clients_per_device=clients_per_device, fuse=fuse)
+                       clients_per_device=clients_per_device, fuse=fuse,
+                       codec=codec)
+    from ..dist.sync import resolve_wire
+    wire_codec, _ = resolve_wire(codec, fuse)
+    ef = (wire_codec is not None and wire_codec.error_feedback
+          and sync in ("fedlay", "ring"))
 
     params_shape = jax.eval_shape(
         lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
@@ -315,17 +329,48 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         params = jax.vmap(apply_updates)(params, updates)
         return params, opt_state, loss
 
+    r_spec = r_shape = None
+    if ef:
+        from ..dist.flat import FlatSpec
+        r_spec = P(client_axis, None)
+        r_shape = jax.ShapeDtypeStruct(
+            (C, FlatSpec.for_tree(stacked_shape).size), jnp.float32)
+
     if masked:
         from ..runtime.masked import masked_mean, masked_where
 
-        def masked_train_step(params, opt_state, batch, mask):
+        def masked_local(params, opt_state, batch, mask):
             new_params, new_opt, loss = local_updates(params, opt_state,
                                                       batch)
             params = masked_where(mask, new_params, params)
             opt_state = masked_where(mask, new_opt, opt_state)
-            params = mix(params, mask)
             return params, opt_state, {"loss": masked_mean(loss, mask),
                                        "num_alive": jnp.sum(mask)}
+
+        if ef:
+            def masked_train_step_ef(params, opt_state, batch, mask,
+                                     residual):
+                params, opt_state, metrics = masked_local(
+                    params, opt_state, batch, mask)
+                params, residual = mix(params, mask, residual)
+                return params, opt_state, metrics, residual
+
+            return StepBundle(
+                step=masked_train_step_ef,
+                in_specs=(p_specs, o_specs, b_specs, P(client_axis),
+                          r_spec),
+                out_specs=(p_specs, o_specs,
+                           {"loss": P(), "num_alive": P()}, r_spec),
+                arg_shapes=(stacked_shape, opt_shape, b_shapes,
+                            jax.ShapeDtypeStruct((C,), jnp.float32),
+                            r_shape),
+            )
+
+        def masked_train_step(params, opt_state, batch, mask):
+            params, opt_state, metrics = masked_local(
+                params, opt_state, batch, mask)
+            params = mix(params, mask)
+            return params, opt_state, metrics
 
         return StepBundle(
             step=masked_train_step,
@@ -333,6 +378,20 @@ def dfl_train_bundle(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
             out_specs=(p_specs, o_specs, {"loss": P(), "num_alive": P()}),
             arg_shapes=(stacked_shape, opt_shape, b_shapes,
                         jax.ShapeDtypeStruct((C,), jnp.float32)),
+        )
+
+    if ef:
+        def train_step_ef(params, opt_state, batch, residual):
+            params, opt_state, loss = local_updates(params, opt_state,
+                                                    batch)
+            params, residual = mix(params, residual)
+            return params, opt_state, {"loss": jnp.mean(loss)}, residual
+
+        return StepBundle(
+            step=train_step_ef,
+            in_specs=(p_specs, o_specs, b_specs, r_spec),
+            out_specs=(p_specs, o_specs, {"loss": P()}, r_spec),
+            arg_shapes=(stacked_shape, opt_shape, b_shapes, r_shape),
         )
 
     def train_step(params, opt_state, batch):

@@ -52,10 +52,12 @@ def tiny_lm(vocab: int = 512, d_model: int = 128, layers: int = 4) -> ArchConfig
 
 
 def make_dfl_step(cfg: ArchConfig, optimizer, mixer, mesh: Mesh,
-                  axis: str = "data"):
+                  axis: str = "data", error_feedback: bool = False):
     """One DFL round: local grad step on each client, then overlay mix.
     The leading local-client dim inside shard_map is G (= 1 for the
-    flat layout), so the local step vmaps over it."""
+    flat layout), so the local step vmaps over it.  With
+    ``error_feedback`` (lossy wire codec) the step carries the (G, N)
+    compression residual through the round."""
 
     def one(p, o, b):
         loss, grads = jax.value_and_grad(
@@ -64,13 +66,29 @@ def make_dfl_step(cfg: ArchConfig, optimizer, mixer, mesh: Mesh,
         updates, o = optimizer.update(grads, o, p)
         return apply_updates(p, updates), o, loss
 
+    spec_c = P(axis)       # leading client dim
+
+    if error_feedback:
+        def body_ef(params_l, opt_l, batch_l, w_l, sw_l, res_l):
+            params_l, opt_l, loss = jax.vmap(one)(params_l, opt_l, batch_l)
+            mixed, res_l = mixer(params_l, w_l, sw_l, res_l)
+            mean_loss = jax.lax.pmean(jnp.mean(loss), axis)
+            return mixed, opt_l, res_l, mean_loss
+
+        body_sm = shard_map(
+            body_ef, mesh=mesh,
+            in_specs=(spec_c, spec_c, spec_c, spec_c, spec_c,
+                      P(axis, None)),
+            out_specs=(spec_c, spec_c, P(axis, None), P()),
+            check_vma=False)
+        return jax.jit(body_sm)
+
     def body(params_l, opt_l, batch_l, w_l, sw_l):
         params_l, opt_l, loss = jax.vmap(one)(params_l, opt_l, batch_l)
         mixed = mixer(params_l, w_l, sw_l)
         mean_loss = jax.lax.pmean(jnp.mean(loss), axis)
         return mixed, opt_l, mean_loss
 
-    spec_c = P(axis)       # leading client dim
     body_sm = shard_map(
         body, mesh=mesh,
         in_specs=(spec_c, spec_c, spec_c, spec_c, spec_c),
@@ -102,16 +120,28 @@ def run(args) -> Dict:
     # FedLay overlay over client ids 0..n-1, compiled to the ppermute
     # schedule (MEP confidence weights from the per-client data skew)
     sched = build_permute_schedule(n, args.spaces)
+    codec_name = getattr(args, "codec", None)
     mixer = make_mixer(args.sync, sched, "data", n, clients_per_device=G,
-                       fuse=getattr(args, "fuse", None))
+                       fuse=getattr(args, "fuse", None), codec=codec_name)
     weights = jax.device_put(jnp.asarray(sched.weights), shard_c)
     self_w = jax.device_put(jnp.asarray(sched.self_weight), shard_c)
+
+    from ..dist.sync import resolve_wire
+    codec, _ = resolve_wire(codec_name, getattr(args, "fuse", None))
+    ef = (codec is not None and codec.error_feedback
+          and args.sync in ("fedlay", "ring"))
+    residual = None
+    if ef:
+        from ..dist.flat import FlatSpec
+        nflat = FlatSpec.for_tree(params).size
+        residual = jax.device_put(jnp.zeros((n, nflat), jnp.float32),
+                                  NamedSharding(mesh, P("data", None)))
 
     # non-iid client shards
     streams = [iter(TokenStream(cfg.vocab_size, args.batch, args.seq,
                                 seed=args.seed, client=c)) for c in range(n)]
 
-    step_fn = make_dfl_step(cfg, optimizer, mixer, mesh)
+    step_fn = make_dfl_step(cfg, optimizer, mixer, mesh, error_feedback=ef)
     losses = []
     t0 = time.time()
     for step in range(args.steps):
@@ -119,14 +149,18 @@ def run(args) -> Dict:
         batch = {"tokens": jnp.asarray(np.stack(xs)),
                  "labels": jnp.asarray(np.stack(ys))}
         batch = jax.tree.map(lambda x: jax.device_put(x, shard_c), batch)
-        params, opt_state, loss = step_fn(params, opt_state, batch,
-                                          weights, self_w)
+        if ef:
+            params, opt_state, residual, loss = step_fn(
+                params, opt_state, batch, weights, self_w, residual)
+        else:
+            params, opt_state, loss = step_fn(params, opt_state, batch,
+                                              weights, self_w)
         losses.append(float(loss))
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d}  loss {losses[-1]:.4f}  "
                   f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
     result = {"sync": args.sync, "clients": n, "clients_per_device": G,
-              "steps": args.steps,
+              "steps": args.steps, "codec": codec_name,
               "first_loss": losses[0], "final_loss": losses[-1],
               "losses": losses}
     if args.out:
@@ -148,6 +182,12 @@ def main() -> int:
                     choices=["tree", "flat"],
                     help="mixing-round execution: per-leaf tree walk "
                          "(default) or the flat-buffer Pallas fused path")
+    ap.add_argument("--codec", default=None,
+                    choices=["none", "bf16", "int8-block", "int4-block",
+                             "topk"],
+                    help="wire codec for the fedlay/ring gossip payload "
+                         "(implies --fuse flat; lossy codecs carry an "
+                         "error-feedback residual through the run)")
     ap.add_argument("--spaces", type=int, default=3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

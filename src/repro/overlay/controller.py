@@ -61,12 +61,14 @@ MIXER_KINDS = ("global", "shard_map")
 class MixerCache:
     """Schedule-keyed LRU compile cache for mixers.
 
-    Keys are ``(PermuteSchedule, fuse)`` pairs — schedules are hashable
-    by perms+weights digest, so two control epochs that converge to the
-    same topology (including the common no-op delta) share one compiled
-    program, while the same topology compiled for different mixing-round
-    execution modes (``fuse=None`` tree walk vs ``fuse="flat"`` Pallas
-    fused, :data:`repro.dist.sync.FUSE_MODES`) never collides.
+    Keys are ``(PermuteSchedule, fuse, codec)`` triples — schedules are
+    hashable by perms+weights digest and codecs are frozen dataclasses,
+    so two control epochs that converge to the same topology (including
+    the common no-op delta) share one compiled program, while the same
+    topology compiled for different mixing-round execution modes
+    (``fuse=None`` tree walk vs ``fuse="flat"`` Pallas fused,
+    :data:`repro.dist.sync.FUSE_MODES`) or different wire codecs
+    (:mod:`repro.wire.codec`) never collides.
     ``maxsize`` bounds the pinned jit closures under sustained churn
     (fresh joiner ids mint a new schedule per membership change); the
     fail→rejoin zero-retrace win only needs the recent past.
@@ -84,10 +86,11 @@ class MixerCache:
         self.evictions = 0
 
     def get(self, sched: PermuteSchedule,
-            fuse: Optional[str] = None) -> Tuple[Callable, bool]:
-        """(mixer, was_hit) for a (schedule, fuse mode), compiling on
-        first sight."""
-        key = (sched, fuse)
+            fuse: Optional[str] = None,
+            codec=None) -> Tuple[Callable, bool]:
+        """(mixer, was_hit) for a (schedule, fuse mode, wire codec),
+        compiling on first sight."""
+        key = (sched, fuse, codec)
         mixer = self._cache.get(key)
         if mixer is not None:
             self.hits += 1
@@ -111,24 +114,27 @@ class MixerCache:
 
 
 def _global_mixer_factory(strategy: str = "fedlay", masked: bool = False,
-                          fuse: Optional[str] = None):
+                          fuse: Optional[str] = None, codec=None,
+                          flat_io: bool = False):
     import jax
     from ..dist.sync import global_mixer
 
     def build(sched: PermuteSchedule) -> Callable:
         return jax.jit(global_mixer(strategy, sched, masked=masked,
-                                    fuse=fuse))
+                                    fuse=fuse, codec=codec,
+                                    flat_io=flat_io))
     return build
 
 
 def _shard_map_mixer_factory(axis_name: str, strategy: str = "fedlay",
                              clients_per_device: int = 1,
-                             fuse: Optional[str] = None):
+                             fuse: Optional[str] = None, codec=None):
     from ..dist.sync import make_mixer
 
     def build(sched: PermuteSchedule) -> Callable:
         return make_mixer(strategy, sched, axis_name, sched.num_clients,
-                          clients_per_device=clients_per_device, fuse=fuse)
+                          clients_per_device=clients_per_device, fuse=fuse,
+                          codec=codec)
     return build
 
 
@@ -196,7 +202,9 @@ class OverlayController:
                  capacity: Optional[int] = None,
                  double_buffered: bool = False,
                  clients_per_device: int = 1,
-                 fuse: Optional[str] = None):
+                 fuse: Optional[str] = None,
+                 codec=None,
+                 flat_io: bool = False):
         """``capacity`` switches the controller into fixed-capacity slot
         mode (:mod:`repro.runtime`): it owns a
         :class:`~repro.runtime.slots.SlotMap`, pads every rebuilt
@@ -227,6 +235,17 @@ class OverlayController:
         Ignored when an explicit ``mixer_factory`` is supplied (the
         factory owns its execution mode) — except that it still
         participates in the cache key.
+
+        ``codec`` (a :mod:`repro.wire.codec` name or instance) makes the
+        default factories compile wire-compressed mixers (implies
+        ``fuse="flat"``); it keys the compile cache alongside the
+        schedule and fuse mode.  For an error-feedback codec the
+        compiled mixer signature grows a trailing residual (see
+        :func:`repro.dist.sync.global_mixer`) — the slot train loop
+        owns that state.  ``flat_io`` compiles mixers that consume and
+        produce the raveled (capacity, N) flat buffer directly
+        (resident flat params; global kind + fedlay/ring only), skipping
+        the per-round ravel/unravel.
         """
         if mixer_kind not in MIXER_KINDS:
             raise ValueError(f"unknown mixer kind {mixer_kind!r}; "
@@ -246,8 +265,14 @@ class OverlayController:
             raise ValueError(
                 f"capacity {capacity} is not a multiple of "
                 f"clients_per_device {clients_per_device}")
-        from ..dist.sync import check_fuse
-        self.fuse = check_fuse(fuse)
+        from ..dist.sync import resolve_wire
+        self.codec, self.fuse = resolve_wire(codec, fuse)
+        self.flat_io = bool(flat_io)
+        if self.flat_io and (mixer_kind != "global"
+                             or self.fuse != "flat"):
+            raise ValueError(
+                "flat_io mixers need mixer_kind='global' and the flat "
+                "fuse mode (fuse='flat' or a codec)")
         self.clients_per_device = clients_per_device
         self.slots = None
         if capacity is not None:
@@ -259,11 +284,13 @@ class OverlayController:
             self.slots = SlotMap(capacity)       # runtime<->overlay cycle
         if mixer_factory is None:
             mixer_factory = (_global_mixer_factory(
-                strategy, masked=capacity is not None, fuse=self.fuse)
+                strategy, masked=capacity is not None, fuse=self.fuse,
+                codec=self.codec, flat_io=self.flat_io)
                 if mixer_kind == "global"
                 else _shard_map_mixer_factory(axis_name, strategy,
                                               clients_per_device,
-                                              fuse=self.fuse))
+                                              fuse=self.fuse,
+                                              codec=self.codec))
         self.cache = MixerCache(mixer_factory, maxsize=cache_size)
         self.rebuilds = 0
         self.swaps = 0
@@ -392,7 +419,8 @@ class OverlayController:
         if not force and self._schedule is not None:
             # quiescent step: same schedule, genuine cache lookup, no
             # host-side rebuild and no retrace
-            self._mixer, hit = self.cache.get(self._schedule, self.fuse)
+            self._mixer, hit = self.cache.get(self._schedule, self.fuse,
+                                              self.codec)
             alive = (self._staged.alive if self._staged is not None
                      else self._alive)
             return False, False, hit, 0.0, alive
@@ -416,7 +444,7 @@ class OverlayController:
                                  self.capacity)
         rebuild_ms = (_time.perf_counter() - t0) * 1e3
         self.rebuilds += 1
-        mixer, hit = self.cache.get(sched, self.fuse)
+        mixer, hit = self.cache.get(sched, self.fuse, self.codec)
         swapped = sched != self._schedule
         if swapped:
             self.swaps += 1

@@ -36,7 +36,7 @@ from ..core.mixing import multirate_participation
 from ..overlay.controller import OverlayController
 from ..overlay.events import ChurnTrace
 from ..overlay.runtime import joiner_donors
-from .slots import RemapPlan
+from .slots import RemapPlan, plan_reset_slots
 
 
 @dataclasses.dataclass
@@ -120,6 +120,23 @@ class SlotTrainLoop:
     0)``; the local-step mask stays pure aliveness (slow clients keep
     training locally, per the paper's asynchrony model).
 
+    With a wire codec on the controller (``OverlayController(codec=...)``)
+    the loop matches the compiled mixer's signature automatically; for an
+    **error-feedback** codec it also owns the residual leaf of the slot
+    runtime state — a (capacity, N) f32 buffer threaded through every
+    mixing round (``mixed, residual = mixer(params, mask, residual)``)
+    and zeroed at joiner *and* leaver slots when a remap plan lands
+    (:func:`repro.runtime.slots.plan_reset_slots`), so no slot ever
+    inherits a previous tenant's compression error.
+
+    With ``OverlayController(flat_io=True)`` the loop keeps the
+    parameters **resident in flat form**: ``self.params`` is the raveled
+    (capacity, N) buffer across steps, the mixer consumes and produces
+    it directly, and the tree view exists only transiently inside the
+    jitted local step (unravel → step → ravel in one program) and in
+    host-side row surgery — the steady-state round never pays a
+    host-visible ravel/unravel.
+
     ``mesh`` (optional) places the capacity axis on a real device mesh:
     every capacity-stacked row tree (params, optimizer state, batches,
     masks) is sharded over ``client_axis``, so with ``capacity = G ×
@@ -168,8 +185,6 @@ class SlotTrainLoop:
         self.make_batch = make_batch
         self.periods = periods
         self.step_time = step_time
-        self.local_step = (jax.jit(local_step) if jit_local_step
-                           else local_step)
         self._jax = jax
         self._step = 0
 
@@ -189,9 +204,37 @@ class SlotTrainLoop:
             raise ValueError("controller has no live nodes")
         dead = jax.tree.map(lambda l: jax.numpy.zeros_like(l), template)
         rows = [r if r is not None else dead for r in rows]
-        self.params = self._shard_rows(self._stack(rows))
-        self.opt_state = self._shard_rows(
-            jax.vmap(optimizer.init)(self.params))
+        stacked = self._stack(rows)
+        self.opt_state = self._shard_rows(jax.vmap(optimizer.init)(stacked))
+
+        self.codec = controller.codec
+        self.ef = self.codec is not None and self.codec.error_feedback
+        self.flat_io = controller.flat_io
+        self._spec = self._row_spec = None
+        if self.flat_io or self.ef:
+            from ..dist.flat import FlatSpec
+            self._spec = FlatSpec.for_tree(stacked)
+            self._row_spec = FlatSpec.for_tree(
+                jax.tree.map(lambda l: l[:1], stacked))
+        if self.flat_io:
+            # params live raveled; the tree view exists only inside the
+            # jitted step and in host-side row surgery
+            self.params = self._shard_rows(self._spec.ravel(stacked))
+            spec = self._spec
+
+            def flat_step(buf, opt_state, batch, mask):
+                p, o, m = local_step(spec.unravel(buf), opt_state,
+                                     batch, mask)
+                return spec.ravel(p), o, m
+            self.local_step = (jax.jit(flat_step) if jit_local_step
+                               else flat_step)
+        else:
+            self.params = self._shard_rows(stacked)
+            self.local_step = (jax.jit(local_step) if jit_local_step
+                               else local_step)
+        self.residual = (self._shard_rows(jax.numpy.zeros(
+            (self.capacity, self._spec.size), jax.numpy.float32))
+            if self.ef else None)
         self.records: List[SlotStepRecord] = []
 
     # ---- state surgery ---------------------------------------------------
@@ -220,16 +263,25 @@ class SlotTrainLoop:
     def _set_row(self, tree, i: int, row):
         return set_tree_row(tree, i, row)
 
+    def _tree_of_row(self, slot: int):
+        """The (unstacked) param tree held at ``slot`` — a direct row
+        read, or an unravel of one flat row in resident-flat mode."""
+        if self.flat_io:
+            return tree_row(
+                self._row_spec.unravel(self.params[slot][None]), 0)
+        return self._row(self.params, slot)
+
     def client_params(self, node_id: int):
         """The (unstacked) current model of one live client."""
-        return self._row(self.params, self.controller.slots.slot_of[node_id])
+        return self._tree_of_row(self.controller.slots.slot_of[node_id])
 
     def _apply_plan(self, plan: RemapPlan) -> Tuple[Tuple[int, ...],
                                                     Tuple[int, ...]]:
         """Membership change as in-place row writes: joiners get a donor
         copy (Fig. 18 catch-up from the highest-confidence surviving
         neighbor) or a fresh init when every neighbor is itself a
-        joiner; leavers' rows just go dead in the mask."""
+        joiner; leavers' rows just go dead in the mask.  Error-feedback
+        residual rows at joiner and leaver slots are zeroed."""
         ctl = self.controller
         joiners = tuple(u for u, _ in plan.joiners)
         survivors = tuple(u for u, _ in plan.survivors)
@@ -238,16 +290,26 @@ class SlotTrainLoop:
         for node, slot in plan.joiners:
             donor = donors.get(node)
             if donor is not None:
-                row = self._row(self.params, ctl.slots.slot_of[donor])
+                row = self._tree_of_row(ctl.slots.slot_of[donor])
             else:
                 row = self.make_params(node)
-            self.params = self._set_row(self.params, slot, row)
+            if self.flat_io:
+                flat = self._row_spec.ravel(
+                    self._jax.tree.map(lambda l: l[None], row))[0]
+                self.params = self.params.at[slot].set(flat)
+            else:
+                self.params = self._set_row(self.params, slot, row)
             self.opt_state = self._jax.tree.map(
                 lambda l, r: l.at[slot].set(r.astype(l.dtype)),
                 self.opt_state, self.optimizer.init(row))
         if joiners:
             self.params = self._shard_rows(self.params)
             self.opt_state = self._shard_rows(self.opt_state)
+        if self.ef:
+            reset = plan_reset_slots(plan)
+            if reset:
+                self.residual = self._shard_rows(
+                    self.residual.at[np.asarray(reset)].set(0.0))
         return joiners, tuple(u for u, _ in plan.leavers)
 
     # ---- per-step masks and batches --------------------------------------
@@ -300,8 +362,14 @@ class SlotTrainLoop:
             params, opt_state, metrics = self.local_step(
                 self.params, self.opt_state, batch, mask)
             # the hot-swap seam: the controller's mask-aware mixer; slow
-            # or dead slots pass through untouched
-            self.params = self._shard_rows(ctl.mixer(params, mix_mask))
+            # or dead slots pass through untouched.  EF codecs thread
+            # the residual leaf through the round.
+            if self.ef:
+                mixed, res = ctl.mixer(params, mix_mask, self.residual)
+                self.residual = self._shard_rows(res)
+            else:
+                mixed = ctl.mixer(params, mix_mask)
+            self.params = self._shard_rows(mixed)
             self.opt_state = self._shard_rows(opt_state)
             self.records.append(SlotStepRecord(
                 step=step, time=report.time, num_alive=len(alive),

@@ -58,6 +58,17 @@ class RemapPlan:
         return out
 
 
+def plan_reset_slots(plan: RemapPlan) -> Tuple[int, ...]:
+    """Slots whose per-slot auxiliary state (e.g. the wire codec's
+    error-feedback residual, :class:`repro.runtime.loop.SlotTrainLoop`)
+    must be zeroed when ``plan`` is applied: every joiner slot (the new
+    occupant must not inherit the previous tenant's residual) and every
+    leaver slot (a dead row's residual would otherwise be replayed if
+    the slot is reused before any intervening join).  Sorted, deduped."""
+    return tuple(sorted({s for _, s in plan.joiners}
+                        | {s for _, s in plan.leavers}))
+
+
 class SlotMap:
     """Node-identity → capacity-slot allocator with a free-slot heap."""
 

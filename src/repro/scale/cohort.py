@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time as _time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -169,6 +170,7 @@ class CohortRoundRecord:
     fresh: int            # cold slots with no surviving donor
     remap_ms: float       # host time for park/restore/schedule rebuild
     retraces: int         # cumulative mixer retraces (must stay 0)
+    evicted: int = 0      # LRU park evictions this round
 
 
 class CohortStreamLoop:
@@ -182,13 +184,24 @@ class CohortStreamLoop:
     with the mixing round, so the whole round is one compiled program.
 
     Stream-out **parks** a node's row host-side and stream-in restores
-    it — node identity is preserved across arbitrarily long absences
-    (the park grows with the number of *distinct* nodes ever sampled;
-    callers streaming truly huge populations should bound K·rounds or
-    snapshot-evict).  A node sampled for the first time is seeded by
-    Fig-18 donor catch-up: the highest-confidence cohort neighbor that
-    is itself a survivor/restored member donates its current model;
-    all-cold neighborhoods fall back to ``make_params``.
+    it — node identity is preserved across arbitrarily long absences.
+    By default the park is unbounded (it grows with the number of
+    *distinct* nodes ever sampled); ``max_parked`` bounds it with LRU
+    eviction — least-recently-parked rows are dropped first, and the
+    optional snapshot/restore policy decides what eviction means:
+
+    * ``snapshot_fn(node_id, row)`` is called with every evicted row —
+      e.g. spill to disk or object storage.  Without one the row is
+      simply discarded (the node re-enters cold, via donor catch-up).
+    * ``restore_fn(node_id) -> row | None`` is consulted on stream-in
+      when the node is not in the host park — the read side of the
+      snapshot policy.  A non-None row counts as ``restored`` exactly
+      like a park hit.
+
+    A node sampled for the first time is seeded by Fig-18 donor
+    catch-up: the highest-confidence cohort neighbor that is itself a
+    survivor/restored member donates its current model; all-cold
+    neighborhoods fall back to ``make_params``.
     """
 
     def __init__(self, sim, *, capacity: int, cohort_size: int,
@@ -197,7 +210,12 @@ class CohortStreamLoop:
                  local_fn: Optional[Callable] = None,
                  profiles_fn: Optional[Callable[
                      [Tuple[int, ...]], Dict[int, ClientProfile]]] = None,
-                 round_time: float = 1.0, seed: int = 0):
+                 round_time: float = 1.0, seed: int = 0,
+                 max_parked: Optional[int] = None,
+                 snapshot_fn: Optional[
+                     Callable[[int, np.ndarray], None]] = None,
+                 restore_fn: Optional[
+                     Callable[[int], Optional[np.ndarray]]] = None):
         import jax
         import jax.numpy as jnp
         from ..kernels.weighted_mix import gather_mix
@@ -215,7 +233,13 @@ class CohortStreamLoop:
         self.salt = getattr(sim, "salt", "")
         self.num_spaces = sim.num_spaces
         self._jnp = jnp
-        self.park: Dict[int, np.ndarray] = {}
+        if max_parked is not None and max_parked < 1:
+            raise ValueError("max_parked must be >= 1 (or None)")
+        self.park: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.max_parked = max_parked
+        self.snapshot_fn = snapshot_fn
+        self.restore_fn = restore_fn
+        self.evictions = 0
         self.records: List[CohortRoundRecord] = []
         self._round = 0
 
@@ -235,27 +259,64 @@ class CohortStreamLoop:
     # ---- state access ----------------------------------------------------
     def client_params(self, node_id: int) -> np.ndarray:
         """A node's current model — live slot row if resident, parked
-        copy otherwise (identity preservation, testable)."""
+        copy otherwise; evicted nodes fall back to the snapshot policy's
+        ``restore_fn`` (identity preservation, testable)."""
         slot = self.slots.slot_of.get(node_id)
         if slot is not None:
             return np.asarray(self.buf[slot])
-        return self.park[node_id]
+        row = self.park.get(node_id)
+        if row is None and self.restore_fn is not None:
+            row = self.restore_fn(node_id)
+        if row is None:
+            raise KeyError(f"node {node_id} is neither resident, parked, "
+                           f"nor restorable")
+        return row
+
+    def _park_row(self, node_id: int, row: np.ndarray) -> int:
+        """Park one row, LRU-evicting past ``max_parked`` (evicted rows
+        go through ``snapshot_fn`` if set).  Returns evictions."""
+        self.park[node_id] = row
+        self.park.move_to_end(node_id)
+        evicted = 0
+        while (self.max_parked is not None
+               and len(self.park) > self.max_parked):
+            victim, vrow = self.park.popitem(last=False)
+            if self.snapshot_fn is not None:
+                self.snapshot_fn(victim, vrow)
+            evicted += 1
+        self.evictions += evicted
+        return evicted
+
+    def _unpark_row(self, node_id: int) -> Optional[np.ndarray]:
+        """Take a row out of the park, falling back to ``restore_fn``
+        for snapshot-evicted nodes.  None = genuinely cold."""
+        row = self.park.pop(node_id, None)
+        if row is None and self.restore_fn is not None:
+            row = self.restore_fn(node_id)
+        return row
+
+    def _warm(self, node_id: int) -> bool:
+        return (node_id in self.park
+                or (self.restore_fn is not None
+                    and self.restore_fn(node_id) is not None))
 
     # ---- one round -------------------------------------------------------
     def _reconcile(self, cohort: Tuple[int, ...],
                    sched: PermuteSchedule,
-                   plan: RemapPlan) -> Tuple[int, int, int]:
-        """Stream-out to the park, stream-in from park / donor / fresh.
-        Returns (restored, donor_seeded, fresh) counts."""
+                   plan: RemapPlan) -> Tuple[int, int, int, int]:
+        """Stream-out to the park, stream-in from park / snapshot /
+        donor / fresh.  Returns (restored, donor_seeded, fresh,
+        evicted) counts."""
         jnp = self._jnp
+        evicted = 0
         for u, s in plan.leavers:
-            self.park[u] = np.asarray(self.buf[s])
+            evicted += self._park_row(u, np.asarray(self.buf[s]))
         self.slots.apply(plan)
         joiners = tuple(u for u, _ in plan.joiners)
         if not joiners:
-            return 0, 0, 0
+            return 0, 0, 0, evicted
         survivors = tuple(u for u, _ in plan.survivors)
-        cold = [u for u in joiners if u not in self.park]
+        cold = [u for u in joiners if not self._warm(u)]
         # parked members count as warm donors: they resume their own
         # model, so their row is as trustworthy as a survivor's
         donors = joiner_donors(sched, cohort, cold,
@@ -266,8 +327,9 @@ class CohortStreamLoop:
         restored = donor_seeded = fresh = 0
         rows, slots_w = [], []
         for u, s in plan.joiners:
-            if u in self.park:
-                rows.append(self.park.pop(u))
+            row = self._unpark_row(u)
+            if row is not None:
+                rows.append(row)
                 restored += 1
             else:
                 donor = donors.get(u)
@@ -282,7 +344,7 @@ class CohortStreamLoop:
         idx = jnp.asarray(np.asarray(slots_w, dtype=np.int32))
         self.buf = self.buf.at[idx].set(
             jnp.asarray(np.stack(rows), dtype=self.buf.dtype))
-        return restored, donor_seeded, fresh
+        return restored, donor_seeded, fresh, evicted
 
     def run(self, num_rounds: int) -> List[CohortRoundRecord]:
         jnp = self._jnp
@@ -297,7 +359,7 @@ class CohortStreamLoop:
             sched, padded = cohort_schedule(
                 cohort, self.num_spaces, plan.slot_of, self.capacity,
                 salt=self.salt, profiles=profiles)
-            restored, donor_seeded, fresh = self._reconcile(
+            restored, donor_seeded, fresh, evicted = self._reconcile(
                 cohort, sched, plan)
             srcs, weights = schedule_tables(padded)
             mask = np.zeros((self.capacity,), dtype=np.float32)
@@ -311,6 +373,7 @@ class CohortStreamLoop:
                 streamed_in=len(plan.joiners),
                 streamed_out=len(plan.leavers),
                 restored=restored, donor_seeded=donor_seeded, fresh=fresh,
-                remap_ms=remap_ms, retraces=self.trace_count.retraces))
+                remap_ms=remap_ms, retraces=self.trace_count.retraces,
+                evicted=evicted))
             self._round += 1
         return self.records

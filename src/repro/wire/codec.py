@@ -1,0 +1,394 @@
+"""Wire codecs: compressed gossip on the flat buffer.
+
+The paper's deployment story is bandwidth-bound D2D gossip
+("Overlay-based DFL in Bandwidth-limited Networks", PAPERS.md):
+per-round wire volume, not topology maintenance, is the binding
+constraint.  :class:`repro.dist.flat.FlatSpec` already collapses each
+client's sync payload into one contiguous lane-padded f32 row — the
+natural seam for compression.  A :class:`WireCodec` maps that (B, N)
+row buffer to the tuple of arrays that actually cross the network
+(``encode``), back (``decode``), and prices it (``wire_bytes``);
+:mod:`repro.dist.sync` threads a codec through both ``fuse="flat"``
+mixing families so every ppermute moves the encoded parts and every
+receive folds them into the accumulator through the fused Pallas
+kernels of :mod:`repro.kernels.wire_codec` (the decompressed 2L stack
+is never materialized).
+
+**The wire-format contract**
+
+* ``encode(buf) -> wire`` — ``buf`` (B, N) f32 (the FlatSpec buffer);
+  ``wire`` a tuple of same-leading-dim arrays, each of which rides the
+  mixing path's routing independently (ppermute / local gather row by
+  row).  Shapes/dtypes are pure functions of (N, codec), so churn masks
+  and cohort swaps never retrace.
+* ``decode(wire, n) -> (B, n) f32`` — the receiver image.  ``n`` is the
+  original column count (the wire is not self-describing; the mixer
+  knows its FlatSpec).
+* ``wire_bytes(n) -> int`` — exact bytes per row on the wire, the
+  closed form :func:`repro.dist.sync.sync_bytes_per_client` multiplies
+  into the paper's §IV-D accounting and
+  ``benchmarks/sync_collectives.py`` pins against HLO-measured
+  collective bytes.
+* **Exactness contract** — ``exact=True`` means ``decode ∘ encode`` is
+  the bit-exact identity on f32; lossy codecs document an element-wise
+  error bound via :meth:`WireCodec.tolerance` (the test currency for
+  the dense-oracle parity pins).
+* **Error feedback** — ``error_feedback=True`` codecs are compensated:
+  the mixer sends ``enc(x + e)`` and carries the new residual
+  ``e' = (x + e) - dec(enc(x + e))`` as a (B, N) f32 leaf of the slot
+  runtime state (:class:`repro.runtime.SlotTrainLoop`).  Residual
+  churn semantics: a masked-out row (dead slot, multirate skip) keeps
+  its residual unchanged; joiner and leaver slots are zeroed
+  (:func:`repro.runtime.slots.plan_reset_slots`).  ``encode_ef`` fuses
+  the residual computation into the encode (no re-decode).
+
+**The codecs**
+
+=============  ======  ====  ===========================================
+name           bytes/N  EF    exactness
+=============  ======  ====  ===========================================
+``none``       4 N     no    bit-exact (identity; the codec-path
+                             plumbing check)
+``bf16``       2 N     no    bit-exact on bf16-representable values;
+                             else |err| ≤ |x|·2⁻⁸ (round-to-nearest
+                             mantissa truncation)
+``int8-block`` ~1.02 N yes   |err| ≤ max|block|/127 · (1/2 + ε_bf16);
+                             documented test bound max|block|/127
+``int4-block`` ~0.52 N yes   |err| ≤ max|block|/7 · (1/2 + ε_bf16);
+                             documented test bound max|block|/7
+``topk``       8 k     yes   kept entries exact; dropped entries err =
+                             |x| (EF carries them to later rounds)
+=============  ======  ====  ===========================================
+
+``int8-block``/``int4-block`` layout: N columns split into
+``ceil(N/block)`` blocks (tail zero-padded — exact), one symmetric
+scale per block stored as bf16 *after* rounding, so encoder and decoder
+multiply by the identical scale (see
+:mod:`repro.kernels.wire_codec`).  ``topk`` keeps each row's k
+largest-magnitude entries as (values f32, indices int32) pairs —
+``k = max(1, round(rate·n))``.
+
+Codecs are frozen dataclasses: hashable and value-equal, so the
+:class:`repro.overlay.controller.MixerCache` keys compiled mixers on
+``(schedule, fuse, codec)`` and churn swaps stay zero-retrace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.weighted_mix import gather_mix, mix_accumulate
+from ..kernels.wire_codec import (dequant_accumulate, dequantize_block,
+                                  gather_mix_int8, padded_width,
+                                  quantize_block)
+
+Wire = Tuple[jnp.ndarray, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Base codec: the identity-coding API plus generic (decode-then-mix)
+    receive hooks that concrete codecs override with fused kernels.
+    See the module docstring for the wire-format contract."""
+
+    #: registry name (class attribute on subclasses)
+    name = "abstract"
+    #: decode ∘ encode is the bit-exact f32 identity
+    exact = False
+    #: the mixer carries a compensated residual for this codec
+    error_feedback = False
+
+    # ---- the coding pair -------------------------------------------------
+    def encode(self, buf: jnp.ndarray) -> Wire:
+        raise NotImplementedError
+
+    def decode(self, wire: Wire, n: int) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def wire_bytes(self, n: int) -> int:
+        """Exact bytes one encoded n-column row puts on the wire."""
+        raise NotImplementedError
+
+    def payload_bytes(self, n: int) -> int:
+        """Bytes of the value payload alone, excluding per-block scale
+        side-channel overhead (== :meth:`wire_bytes` for codecs without
+        one).  ``4n / payload_bytes(n)`` is the headline compression
+        factor; ``4n / wire_bytes(n)`` the honest on-the-wire one."""
+        return self.wire_bytes(n)
+
+    def tolerance(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Element-wise upper bound on |decode(encode(buf)) − buf| —
+        the documented exactness contract, used by the oracle-parity
+        tests."""
+        raise NotImplementedError
+
+    # ---- error feedback --------------------------------------------------
+    def encode_ef(self, buf: jnp.ndarray) -> Tuple[Wire, jnp.ndarray]:
+        """(wire, residual = buf − decode(wire)).  Generic form decodes
+        once; fused codecs override (int8 computes the residual inside
+        the quantize kernel)."""
+        wire = self.encode(buf)
+        return wire, buf.astype(jnp.float32) - self.decode(wire,
+                                                           buf.shape[1])
+
+    # ---- fused receive hooks ---------------------------------------------
+    def accumulate(self, acc: Optional[jnp.ndarray], wire: Wire,
+                   w: jnp.ndarray) -> jnp.ndarray:
+        """``acc + w[:, None]·decode(wire)`` — the shard_map receive.
+        Generic form materializes one decoded buffer (never a 2L
+        stack); fused codecs dequantize in-kernel."""
+        n = acc.shape[1]
+        return mix_accumulate(acc, self.decode(wire, n), w)
+
+    def gather(self, wire: Wire, srcs, weights: jnp.ndarray,
+               n: int) -> jnp.ndarray:
+        """Round-matrix mixing over the encoded population — the global
+        fused receive.  Generic form decodes once then calls
+        :func:`~repro.kernels.weighted_mix.gather_mix`."""
+        return gather_mix(self.decode(wire, n), srcs, weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoneCodec(WireCodec):
+    """Identity codec: the uncompressed f32 row, routed through the
+    codec plumbing (the exactness control arm — must be bit-equal to
+    the codec-free flat path)."""
+
+    name = "none"
+    exact = True
+
+    def encode(self, buf):
+        return (buf.astype(jnp.float32),)
+
+    def decode(self, wire, n):
+        return wire[0][:, :n]
+
+    def wire_bytes(self, n):
+        return 4 * n
+
+    def tolerance(self, buf):
+        return jnp.zeros_like(buf, dtype=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(WireCodec):
+    """Truncate the wire row to bf16 (2 bytes/element): bit-exact for
+    values already representable in bf16 (e.g. bf16-dtype param leaves
+    raveled into the f32 buffer), |err| ≤ |x|·2⁻⁸ otherwise.  No error
+    feedback — the relative error is already at parameter-noise level.
+
+    The wire part carries the raw bf16 bits **bitcast to uint16**:
+    with a plain bf16 array XLA recognizes the f32→bf16→f32 round-trip
+    around the collective, fuses the converts, and sends the full f32
+    row (observed on the CPU backend; ``optimization_barrier`` does not
+    survive its pass pipeline).  A bitcast is opaque to that
+    simplification, so the permute genuinely moves 2 bytes/element.
+    The receive hooks upcast to f32 *before* the mixing kernels: the
+    kernels accumulate in their input dtype, and a bf16 accumulator
+    would add a second rounding on every partial sum."""
+
+    name = "bf16"
+
+    @staticmethod
+    def _bits(part):
+        return jax.lax.bitcast_convert_type(part, jnp.bfloat16)
+
+    def encode(self, buf):
+        return (jax.lax.bitcast_convert_type(
+            buf.astype(jnp.bfloat16), jnp.uint16),)
+
+    def decode(self, wire, n):
+        return self._bits(wire[0])[:, :n].astype(jnp.float32)
+
+    def wire_bytes(self, n):
+        return 2 * n
+
+    def tolerance(self, buf):
+        return jnp.abs(buf.astype(jnp.float32)) * 2.0 ** -8
+
+    def accumulate(self, acc, wire, w):
+        return mix_accumulate(acc, self.decode(wire, acc.shape[1]), w)
+
+    def gather(self, wire, srcs, weights, n):
+        return gather_mix(self.decode(wire, n), srcs, weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8BlockCodec(WireCodec):
+    """Symmetric per-block int8 quantization (~4× wire reduction):
+    ``q = round(x/s) ∈ [-127, 127]`` with one bf16 scale
+    ``s = max|block|/127`` per ``block`` columns — the
+    :mod:`repro.kernels.wire_codec` kernel pair, with the dequantize
+    fused into both receive paths.  Error feedback compensates the
+    ≤ s/2 per-element rounding."""
+
+    block: int = 128
+
+    name = "int8-block"
+    error_feedback = True
+    levels = 127
+
+    def encode(self, buf):
+        return quantize_block(buf, block=self.block, levels=self.levels)
+
+    def encode_ef(self, buf):
+        q, s, res = quantize_block(buf, block=self.block, levels=self.levels,
+                                   with_residual=True)
+        return (q, s), res
+
+    def decode(self, wire, n):
+        q, s = wire
+        return dequantize_block(q, s, block=self.block)[:, :n]
+
+    def wire_bytes(self, n):
+        nb = -(-n // self.block)
+        return nb * self.block + 2 * nb          # int8 payload + bf16 scales
+
+    def payload_bytes(self, n):
+        return -(-n // self.block) * self.block  # 1 byte/element, padded
+
+    def tolerance(self, buf):
+        x = buf.astype(jnp.float32)
+        B, n = x.shape
+        nb = -(-n // self.block)
+        xp = jnp.pad(x, ((0, 0), (0, nb * self.block - n)))
+        amax = jnp.max(jnp.abs(xp.reshape(B, nb, self.block)), axis=2)
+        bound = jnp.repeat(amax / self.levels, self.block, axis=1)
+        return bound[:, :n]
+
+    def accumulate(self, acc, wire, w):
+        q, s = wire
+        return dequant_accumulate(acc, q, s, w, block=self.block)
+
+    def gather(self, wire, srcs, weights, n):
+        q, s = wire
+        return gather_mix_int8(q, s, srcs, weights,
+                               block=self.block)[:, :n]
+
+
+@dataclasses.dataclass(frozen=True)
+class Int4BlockCodec(WireCodec):
+    """4-bit symmetric per-block quantization (~8× wire reduction):
+    levels ±7, two values packed per byte (biased nibbles: byte =
+    (q₂ᵢ₊₁+8)·16 + (q₂ᵢ+8)), bf16 scales as in int8-block.  Packing
+    runs as cheap jnp byte ops on top of the shared quantize kernel;
+    the receive decodes through the generic hooks (one materialized
+    buffer — the payload is small enough that fusion stops mattering)."""
+
+    block: int = 128
+
+    name = "int4-block"
+    error_feedback = True
+    levels = 7
+
+    def _pack_width(self, n: int) -> int:
+        return -(-padded_width(n, self.block) // 2)
+
+    def encode(self, buf):
+        q, s = quantize_block(buf, block=self.block, levels=self.levels)
+        return self._pack(q) + (s,)
+
+    def encode_ef(self, buf):
+        q, s, res = quantize_block(buf, block=self.block, levels=self.levels,
+                                   with_residual=True)
+        return self._pack(q) + (s,), res
+
+    def _pack(self, q) -> Wire:
+        if q.shape[1] % 2:
+            q = jnp.pad(q, ((0, 0), (0, 1)))
+        qb = (q.astype(jnp.int32) + 8).astype(jnp.uint8)
+        return (qb[:, 0::2] | (qb[:, 1::2] << 4),)
+
+    def decode(self, wire, n):
+        packed, s = wire
+        B = packed.shape[0]
+        lo = (packed & 0xF).astype(jnp.int32) - 8
+        hi = (packed >> 4).astype(jnp.int32) - 8
+        q = jnp.stack([lo, hi], axis=-1).reshape(B, -1)
+        nq = padded_width(n, self.block)
+        return dequantize_block(q[:, :nq].astype(jnp.int8), s,
+                                block=self.block)[:, :n]
+
+    def wire_bytes(self, n):
+        nb = -(-n // self.block)
+        return self._pack_width(n) + 2 * nb
+
+    def payload_bytes(self, n):
+        return self._pack_width(n)               # half byte/element, padded
+
+    def tolerance(self, buf):
+        x = buf.astype(jnp.float32)
+        B, n = x.shape
+        nb = -(-n // self.block)
+        xp = jnp.pad(x, ((0, 0), (0, nb * self.block - n)))
+        amax = jnp.max(jnp.abs(xp.reshape(B, nb, self.block)), axis=2)
+        return jnp.repeat(amax / self.levels, self.block, axis=1)[:, :n]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(WireCodec):
+    """Magnitude top-k sparsification: each row keeps its k
+    largest-|x| entries as (values f32, indices int32) — 8k bytes, a
+    ``1/(2·rate)``× wire reduction.  Kept entries are exact; dropped
+    entries are the error, so this codec is only sensible with error
+    feedback (the residual re-submits dropped mass every round)."""
+
+    rate: float = 0.0625
+
+    name = "topk"
+    error_feedback = True
+
+    def __post_init__(self):
+        if not 0.0 < self.rate <= 1.0:
+            raise ValueError(f"topk rate {self.rate} not in (0, 1]")
+
+    def k_for(self, n: int) -> int:
+        return max(1, int(round(self.rate * n)))
+
+    def encode(self, buf):
+        x = buf.astype(jnp.float32)
+        _, idx = jax.lax.top_k(jnp.abs(x), self.k_for(x.shape[1]))
+        vals = jnp.take_along_axis(x, idx, axis=1)
+        return vals, idx.astype(jnp.int32)
+
+    def encode_ef(self, buf):
+        x = buf.astype(jnp.float32)
+        vals, idx = self.encode(x)
+        rows = jnp.broadcast_to(jnp.arange(x.shape[0])[:, None], idx.shape)
+        return (vals, idx), x.at[rows, idx].set(0.0)
+
+    def decode(self, wire, n):
+        vals, idx = wire
+        B, k = vals.shape
+        rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, k))
+        return jnp.zeros((B, n), jnp.float32).at[rows, idx].add(vals)
+
+    def wire_bytes(self, n):
+        return 8 * self.k_for(n)
+
+    def tolerance(self, buf):
+        # dropped entries lose their whole value; kept ones are exact.
+        return jnp.abs(buf.astype(jnp.float32))
+
+
+#: Registry of default codec instances by name (CLI / config currency).
+WIRE_CODECS = {c.name: c for c in (
+    NoneCodec(), Bf16Codec(), Int8BlockCodec(), Int4BlockCodec(),
+    TopKCodec())}
+
+
+def get_codec(codec: Union[None, str, WireCodec]) -> Optional[WireCodec]:
+    """Resolve a codec knob: ``None`` → no codec (the uncompressed
+    paths, byte-identical to pre-codec behavior), a registry name →
+    its default instance, an instance → itself."""
+    if codec is None or isinstance(codec, WireCodec):
+        return codec
+    got = WIRE_CODECS.get(codec)
+    if got is None:
+        raise ValueError(f"unknown wire codec {codec!r}; choose from "
+                         f"{tuple(WIRE_CODECS)}")
+    return got

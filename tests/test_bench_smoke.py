@@ -88,6 +88,23 @@ def test_benchmarks_quick_mix_fusion_json():
     # "no slower per round in quick mode" — the fused round eliminates
     # T·2L−2L collective dispatches, which dominates even on CPU
     assert rnd["flat"]["per_round_ms"] <= rnd["tree"]["per_round_ms"]
+    # ISSUE 7: the wire-codec axis — HLO-measured reductions vs the
+    # uncompressed flat round (int8 pays ~2 bf16 scale bytes per
+    # 128-value block on the wire, hence >= 3.5x measured vs 4x payload)
+    codec = {r["codec"]: r for r in rows
+             if r["table"] == "mix_fusion_codec"}
+    assert set(codec) >= {"uncompressed", "bf16", "int8-block",
+                          "int4-block", "topk"}
+    assert codec["uncompressed"]["wire_reduction"] == 1.0
+    assert codec["bf16"]["wire_reduction"] >= 1.9
+    assert codec["int8-block"]["wire_reduction"] >= 3.5
+    assert codec["int8-block"]["payload_reduction"] >= 4.0
+    assert codec["int4-block"]["wire_reduction"] >= 4.0
+    assert codec["topk"]["wire_reduction"] >= 4.0
+    for r in codec.values():
+        # measured collective bytes agree with the codec closed form
+        assert abs(r["wire_mb"] - r["predicted_wire_mb"]) <= \
+            0.05 * r["predicted_wire_mb"] + 1e-4, r
 
 
 def test_benchmarks_history_log_and_baseline_gate():
@@ -122,6 +139,13 @@ def test_baseline_compare_flags_regressions():
     assert perf_direction("per_round_ms") == -1
     assert perf_direction("steps_per_s") == +1
     assert perf_direction("final_loss") is None
+    # ISSUE 7: bytes-on-the-wire fields gate lower-is-better, reduction
+    # factors higher-is-better; identity-ish names stay ungated
+    assert perf_direction("wire_mb") == -1
+    assert perf_direction("payload_bytes") == -1
+    assert perf_direction("wire_reduction") == +1
+    assert perf_direction("wire_mb_per_dev") is None
+    assert perf_direction("codec") is None
     base = [{"table": "t", "loop": "slot", "steps_per_s": 100.0,
              "seconds": 2.0, "final_loss": 0.5}]
     bad = [{"table": "t", "loop": "slot", "steps_per_s": 60.0,
@@ -148,7 +172,8 @@ def test_benchmarks_quick_sync_collectives_grouped_json():
         data = json.load(f)
     assert not data["failed"] and data["rows"]
     fedlay = {r["clients_per_device"]: r for r in data["rows"]
-              if r.get("strategy") == "fedlay"}
+              if r.get("strategy") == "fedlay"
+              and r["table"] == "sync_collectives"}
     assert 1 in fedlay and any(g > 1 for g in fedlay)
     for g, row in fedlay.items():
         assert row["clients"] == 8 * g
@@ -157,6 +182,18 @@ def test_benchmarks_quick_sync_collectives_grouped_json():
         assert row["exact_mb_per_client"] <= bound + 1e-6
         if g > 1:
             assert row["exact_mb_per_client"] < bound
+    # ISSUE 7: the codec axis pins sync_bytes_per_client(codec=)
+    # against the HLO-measured compressed round (gap = lane padding)
+    codec = {r["codec"]: r for r in data["rows"]
+             if r["table"] == "sync_collectives_codec"}
+    assert set(codec) >= {"uncompressed", "bf16", "int8-block",
+                          "int4-block", "topk"}
+    for r in codec.values():
+        assert abs(r["wire_mb_per_dev"] - r["predicted_mb_per_client"]) \
+            <= 0.05 * r["predicted_mb_per_client"] + 1e-3, r
+    assert codec["int8-block"]["wire_reduction"] >= 3.5
+    assert codec["int4-block"]["wire_reduction"] >= 4.0
+    assert codec["topk"]["wire_reduction"] >= 4.0
 
 
 def test_benchmarks_quick_fig20_json():

@@ -193,3 +193,88 @@ def test_loop_matches_dense_oracle_round_by_round():
         after = np.asarray(loop.buf, dtype=np.float64)
         assert float(np.abs(after - M @ before).max()) <= 1e-6
     assert loop.trace_count.retraces == 0
+
+
+# --------------------------------------------------------------------------
+# Bounded park: LRU eviction + snapshot/restore (ISSUE 7 satellite)
+# --------------------------------------------------------------------------
+
+def test_park_lru_eviction_is_bounded_and_counted():
+    """Disjoint cohorts over a big population: the park never exceeds
+    max_parked, evictions hit the oldest entries first, and the round
+    records carry the eviction count."""
+    sim = make_sim(40)
+    cohorts = [tuple(range(8 * r, 8 * r + 8)) for r in range(4)]
+    loop = CohortStreamLoop(sim, capacity=8, cohort_size=8,
+                            make_params=make_params,
+                            sampler=FixedSampler(cohorts),
+                            max_parked=8)
+    loop.run(4)
+    assert len(loop.park) <= 8
+    # round 1 parks cohort 0; rounds 2 and 3 each park 8 more and evict
+    # the 8 oldest — only the most recently parked cohort survives
+    assert loop.evictions == 16
+    assert loop.records[-1].evicted == 8
+    assert set(loop.park) == set(cohorts[2])
+
+
+def test_park_unbounded_by_default():
+    sim = make_sim(40)
+    cohorts = [tuple(range(8 * r, 8 * r + 8)) for r in range(4)]
+    loop = CohortStreamLoop(sim, capacity=8, cohort_size=8,
+                            make_params=make_params,
+                            sampler=FixedSampler(cohorts))
+    loop.run(4)
+    assert len(loop.park) == 24 and loop.evictions == 0
+    assert all(r.evicted == 0 for r in loop.records)
+
+
+def test_park_eviction_snapshot_restore_preserves_identity():
+    """With a snapshot/restore policy the evicted row round-trips: the
+    node re-enters with exactly the state it was evicted with (restored,
+    not donor-seeded), so a bounded park stays identity-preserving."""
+    store = {}
+    sim = make_sim(20)
+    cohorts = [(0, 1, 2, 3), (4, 5, 6, 7), (8, 9, 10, 11), (0, 1, 2, 3)]
+    loop = CohortStreamLoop(
+        sim, capacity=4, cohort_size=4, make_params=make_params,
+        sampler=FixedSampler(cohorts), max_parked=4,
+        snapshot_fn=lambda u, row: store.__setitem__(u, row.copy()),
+        restore_fn=lambda u: store.get(u))
+    loop.run(2)
+    p0 = loop.client_params(0).copy()   # parked after round 1
+    loop.run(1)                          # round 2 parks 4..7 -> 0..3 evicted
+    assert set(store) == {0, 1, 2, 3}
+    assert 0 not in loop.park
+    # client_params falls through park -> restore_fn
+    np.testing.assert_array_equal(loop.client_params(0), p0)
+    loop.run(1)                          # 0..3 stream back in
+    r = loop.records[-1]
+    assert r.restored == 4 and r.donor_seeded == 0 and r.fresh == 0
+    np.testing.assert_array_equal(
+        np.asarray(loop.buf)[loop.slots.slot_of[0]], p0)
+
+
+def test_park_eviction_without_restore_falls_back_to_donor():
+    """Evicted with no snapshot policy = truly forgotten: on return the
+    node is donor-seeded like any cold joiner (graceful degradation,
+    not a crash)."""
+    sim = make_sim(20)
+    cohorts = [(0, 1, 2, 3), (4, 5, 6, 7), (8, 9, 10, 11), (0, 8, 9, 10)]
+    loop = CohortStreamLoop(sim, capacity=4, cohort_size=4,
+                            make_params=make_params,
+                            sampler=FixedSampler(cohorts), max_parked=4)
+    loop.run(3)
+    with pytest.raises(KeyError):
+        loop.client_params(0)            # evicted, no restore policy
+    loop.run(1)                          # 0 rejoins a warm cohort
+    r = loop.records[-1]
+    assert r.streamed_in == 1
+    assert r.restored == 0 and r.donor_seeded == 1 and r.fresh == 0
+
+
+def test_park_validates_max_parked():
+    sim = make_sim(8)
+    with pytest.raises(ValueError, match="max_parked"):
+        CohortStreamLoop(sim, capacity=4, cohort_size=4,
+                         make_params=make_params, max_parked=0)

@@ -621,3 +621,38 @@ def test_slot_loop_drives_masked_dfl_train_bundle():
     assert all(np.isfinite(r.loss) for r in recs)
     assert recs[-1].num_alive == 3
     assert loop.controller.alive == (0, 1, 50)
+
+
+def test_slot_loop_resident_flat_matches_tree_loop():
+    """ISSUE 7 satellite: with OverlayController(flat_io=True) the loop
+    keeps the population as the resident (capacity, N) flat buffer —
+    ravel/unravel leaves the hot loop — yet observes identical churn,
+    loss parity, zero retraces, and identity-preserving client_params."""
+    from repro.optim.optimizers import sgd
+    opt = sgd(0.0)
+    tjit, _ = counting_jit(masked_local_step(_base_step()))
+    tree_loop = SlotTrainLoop(
+        OverlayController(make_sim(n=6), capacity=8, fuse="flat"),
+        local_step=tjit, make_params=_make_params, optimizer=opt,
+        make_batch=_make_batch, jit_local_step=False)
+    recs_t = tree_loop.run(12, trace=_churn())
+
+    fjit, fcount = counting_jit(masked_local_step(_base_step()))
+    flat_loop = SlotTrainLoop(
+        OverlayController(make_sim(n=6), capacity=8, fuse="flat",
+                          flat_io=True),
+        local_step=fjit, make_params=_make_params, optimizer=opt,
+        make_batch=_make_batch, jit_local_step=False)
+    assert flat_loop.flat_io
+    recs_f = flat_loop.run(12, trace=_churn())
+
+    assert [r.num_alive for r in recs_t] == [r.num_alive for r in recs_f]
+    np.testing.assert_allclose([r.loss for r in recs_t],
+                               [r.loss for r in recs_f],
+                               rtol=1e-5, atol=1e-5)
+    assert fcount.traces == 1 and fcount.retraces == 0
+    # client_params unravels one row back to the tree contract
+    for u in (0, 100):
+        pt = np.asarray(tree_loop.client_params(u)["w"])
+        pf = np.asarray(flat_loop.client_params(u)["w"])
+        np.testing.assert_allclose(pf, pt, rtol=1e-6, atol=1e-6)

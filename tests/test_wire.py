@@ -1,0 +1,529 @@
+"""Wire-compression subsystem (ISSUE 7): the :mod:`repro.wire.codec`
+codecs and their plumbing through the mixing families.
+
+Pinned here:
+
+* the **coding contract** — ``decode ∘ encode`` is bit-exact for exact
+  codecs, within the documented :meth:`WireCodec.tolerance` bound for
+  lossy ones; ``wire_bytes(n)`` equals the actual bytes of the encoded
+  parts; ``payload_bytes ≤ wire_bytes``; ``encode_ef`` returns exactly
+  ``buf − decode(wire)`` (fixed cases, a seeded shapes×dtypes×blocks
+  fuzz that always runs, and a hypothesis sibling);
+* **compressed mixing ≡ dense oracle** — shard_map ``fedlay_mix`` and
+  the global fused mixer with ``codec="int8-block"`` / ``"topk"``
+  match ``schedule_mixing_matrix`` / ``masked_mixing_matrix`` within
+  the per-element bound ``W_dense @ tolerance`` for G ∈ {1, 2, 4},
+  masked and unmasked, on the real 8-device mesh;
+* **error feedback** — a lossy-codec consensus loop with EF lands
+  within ε of the exact consensus (the residual carries what each
+  round drops); masked-out rows keep their residual, remapped slots
+  get it zeroed (:func:`repro.runtime.slots.plan_reset_slots`);
+* **control plane** — the MixerCache keys on (schedule, fuse, codec);
+  the grouped capacity-mode churn loop holds zero retraces with
+  ``codec="int8-block"``; ``sync_bytes_per_client(codec=)`` prices the
+  fedlay/ring wire by ``wire_bytes`` and leaves allreduce alone.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.mixing import (build_permute_schedule, masked_mixing_matrix,
+                               schedule_mixing_matrix)
+from repro.dist.compat import make_client_mesh, shard_map
+from repro.dist.flat import FlatSpec
+from repro.dist.sync import (fedlay_mix, global_mixer, make_mixer,
+                             resolve_wire, sync_bytes_per_client)
+from repro.wire.codec import WIRE_CODECS, get_codec
+
+CODEC_NAMES = tuple(WIRE_CODECS)
+LOSSY = ("bf16", "int8-block", "int4-block", "topk")
+EIGHT_DEVICES = jax.device_count() >= 8
+
+
+def _buf(B=3, N=200, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((scale * rng.normal(size=(B, N))).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# The coding contract
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_codec_round_trip_within_documented_tolerance(name):
+    codec = get_codec(name)
+    buf = _buf(B=4, N=300, seed=1)
+    wire = codec.encode(buf)
+    out = np.asarray(codec.decode(wire, buf.shape[1]))
+    assert out.shape == buf.shape and out.dtype == np.float32
+    tol = np.asarray(codec.tolerance(buf))
+    err = np.abs(out - np.asarray(buf))
+    assert (err <= tol + 1e-7).all(), float((err - tol).max())
+    if codec.exact:
+        np.testing.assert_array_equal(out, np.asarray(buf))
+
+
+def test_none_codec_is_bit_exact_identity():
+    codec = get_codec("none")
+    buf = _buf(seed=2)
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(codec.encode(buf), buf.shape[1])),
+        np.asarray(buf))
+
+
+def test_bf16_codec_exact_on_representable_and_2byte_wire():
+    codec = get_codec("bf16")
+    # values already on the bf16 grid survive bit-exactly
+    buf = jnp.asarray(np.asarray(
+        _buf(seed=3).astype(jnp.bfloat16), np.float32))
+    out = codec.decode(codec.encode(buf), buf.shape[1])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(buf))
+    # and the wire part is genuinely 2 bytes/element (u16 bits, so XLA
+    # cannot cancel the f32->bf16->f32 round-trip across a collective)
+    (part,) = codec.encode(buf)
+    assert part.dtype == jnp.uint16
+    assert part.nbytes == buf.shape[0] * codec.wire_bytes(buf.shape[1])
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_wire_bytes_equals_actual_part_bytes(name):
+    codec = get_codec(name)
+    for N in (64, 127, 128, 300, 513):
+        buf = _buf(B=2, N=N, seed=N)
+        wire = codec.encode(buf)
+        actual = sum(int(p.nbytes) for p in wire)
+        assert actual == 2 * codec.wire_bytes(N), (name, N)
+        assert codec.payload_bytes(N) <= codec.wire_bytes(N)
+
+
+def test_int8_block_closed_forms():
+    codec = get_codec("int8-block")
+    b = codec.block
+    # N=256: two blocks -> 256 payload bytes + 2 bf16 scales
+    assert codec.wire_bytes(2 * b) == 2 * b + 4
+    assert codec.payload_bytes(2 * b) == 2 * b
+    # ragged tail pads to the block boundary
+    assert codec.wire_bytes(b + 1) == 2 * b + 4
+
+
+@pytest.mark.parametrize("name", ("int8-block", "int4-block", "topk"))
+def test_encode_ef_residual_is_exact_compensation(name):
+    codec = get_codec(name)
+    assert codec.error_feedback
+    buf = _buf(B=3, N=260, seed=7)
+    wire, res = codec.encode_ef(buf)
+    ref = np.asarray(buf) - np.asarray(codec.decode(wire, buf.shape[1]))
+    np.testing.assert_allclose(np.asarray(res), ref, atol=1e-6)
+
+
+def test_topk_keeps_largest_and_drops_rest():
+    codec = get_codec("topk")
+    N = 160
+    k = max(1, round(codec.rate * N))
+    buf = _buf(B=2, N=N, seed=9)
+    out = np.asarray(codec.decode(codec.encode(buf), N))
+    for r in range(buf.shape[0]):
+        row = np.asarray(buf)[r]
+        keep = np.argsort(np.abs(row))[-k:]
+        np.testing.assert_array_equal(out[r, keep], row[keep])
+        dropped = np.setdiff1d(np.arange(N), keep)
+        assert (out[r, dropped] == 0).all()
+
+
+def test_get_codec_registry_and_passthrough():
+    assert get_codec(None) is None
+    assert get_codec("none").name == "none"
+    codec = get_codec("int8-block")
+    assert get_codec(codec) is codec
+    with pytest.raises(ValueError, match="codec"):
+        get_codec("zstd")
+    # frozen dataclasses: hashable, value-equal -> usable as cache keys
+    assert get_codec("int8-block") == get_codec("int8-block")
+    assert len({get_codec(n) for n in CODEC_NAMES}) == len(CODEC_NAMES)
+
+
+def test_resolve_wire_implies_flat():
+    codec, fuse = resolve_wire("int8-block", None)
+    assert codec.name == "int8-block" and fuse == "flat"
+    assert resolve_wire(None, None) == (None, None)
+    assert resolve_wire(None, "tree")[1] in (None, "tree")  # tree walk
+    # a codec always lands on the flat row buffer
+    assert resolve_wire("bf16", "tree")[1] == "flat"
+    with pytest.raises(ValueError):
+        resolve_wire(None, "bogus")
+
+
+# --------------------------------------------------------------------------
+# Seeded fuzz: shapes × dtypes × block sizes (always runs; hypothesis
+# sibling below adds minimized counterexamples where available)
+# --------------------------------------------------------------------------
+
+def _fuzz_tree(rng, batch):
+    dtypes = [np.float32, jnp.bfloat16, np.float32]
+    tree = {}
+    for i in range(rng.integers(1, 4)):
+        shape = (batch,) + tuple(
+            int(rng.integers(1, 9)) for _ in range(rng.integers(1, 3)))
+        arr = rng.normal(size=shape).astype(np.float32) * 10.0 ** \
+            rng.integers(-2, 3)
+        tree[f"l{i}"] = jnp.asarray(arr).astype(
+            dtypes[rng.integers(0, len(dtypes))])
+    return tree
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_fuzz_codec_round_trip_over_flat_specs(seed):
+    """Random mixed-dtype trees raveled through FlatSpec, every codec:
+    decode(encode) within tolerance, wire bytes exact, EF residual
+    exact — across ragged widths and both int block layouts."""
+    from repro.wire.codec import Int4BlockCodec, Int8BlockCodec
+    rng = np.random.default_rng(seed)
+    batch = int(rng.integers(1, 5))
+    spec = FlatSpec.for_tree(_fuzz_tree(rng, batch))
+    buf = jnp.asarray(rng.normal(size=(batch, spec.size))
+                      .astype(np.float32))
+    codecs = [get_codec(n) for n in CODEC_NAMES]
+    codecs += [Int8BlockCodec(block=int(b)) for b in (32, 256)]
+    codecs += [Int4BlockCodec(block=64)]
+    for codec in codecs:
+        wire = codec.encode(buf)
+        assert all(int(p.shape[0]) == batch for p in wire)
+        assert sum(int(p.nbytes) for p in wire) == \
+            batch * codec.wire_bytes(spec.size)
+        out = np.asarray(codec.decode(wire, spec.size))
+        tol = np.asarray(codec.tolerance(buf))
+        assert (np.abs(out - np.asarray(buf)) <= tol + 1e-6).all(), \
+            codec.name
+        if codec.error_feedback:
+            wire2, res = codec.encode_ef(buf)
+            ref = np.asarray(buf) - np.asarray(
+                codec.decode(wire2, spec.size))
+            np.testing.assert_allclose(np.asarray(res), ref, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       batch=st.integers(min_value=1, max_value=4),
+       width=st.integers(min_value=1, max_value=700),
+       block=st.sampled_from((32, 64, 128, 256)))
+def test_property_codec_round_trip(seed, batch, width, block):
+    from repro.wire.codec import Int8BlockCodec
+    rng = np.random.default_rng(seed)
+    buf = jnp.asarray(rng.normal(size=(batch, width)).astype(np.float32))
+    for codec in (get_codec("bf16"), Int8BlockCodec(block=block),
+                  get_codec("topk")):
+        out = np.asarray(codec.decode(codec.encode(buf), width))
+        tol = np.asarray(codec.tolerance(buf))
+        assert (np.abs(out - np.asarray(buf)) <= tol + 1e-6).all()
+
+
+def test_flat_spec_over_shape_dtype_structs():
+    """FlatSpec.for_tree accepts abstract trees (the launch-time sizing
+    path that allocates EF residual buffers before params exist)."""
+    tree = {"w": jax.ShapeDtypeStruct((4, 3, 5), jnp.float32),
+            "b": jax.ShapeDtypeStruct((4, 7), jnp.bfloat16)}
+    spec = FlatSpec.for_tree(tree)
+    assert spec.batch == 4 and spec.size % 128 == 0
+    concrete = {"w": jnp.zeros((4, 3, 5), jnp.float32),
+                "b": jnp.zeros((4, 7), jnp.bfloat16)}
+    assert FlatSpec.for_tree(concrete) == spec
+
+
+# --------------------------------------------------------------------------
+# Compressed mixing vs the dense oracle (the acceptance pin)
+# --------------------------------------------------------------------------
+
+def _mix_on_mesh(sched, X, codec, mask=None, num_devices=8):
+    n = sched.num_clients
+    mesh = make_client_mesh(num_devices, "data")
+    shard = NamedSharding(mesh, P("data"))
+    W, S = jnp.asarray(sched.weights), jnp.asarray(sched.self_weight)
+    tree = {"m": jnp.asarray(X)}
+    wire_codec = get_codec(codec)
+    ef = wire_codec is not None and wire_codec.error_feedback
+    nflat = FlatSpec.for_tree({"m": X[:1]}).size
+    in_specs = [P("data"), P("data"), P("data")]
+    args = [tree["m"], W, S]
+    if mask is not None:
+        in_specs.append(P("data"))
+        args.append(jnp.asarray(mask, jnp.float32))
+    if ef:
+        in_specs.append(P("data", None))
+        args.append(jnp.zeros((n, nflat), jnp.float32))
+
+    def body(x, w, s, *rest):
+        m = rest[0] if mask is not None else None
+        r = rest[-1] if ef else None
+        out = fedlay_mix({"m": x}, sched, w, s, "data", mask=m,
+                         fuse="flat", codec=wire_codec, residual=r)
+        if ef:
+            out, res = out
+            return out["m"], res
+        return out["m"]
+
+    out_specs = (P("data"), P("data", None)) if ef else P("data")
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                          out_specs=out_specs, check_vma=False))
+    out = f(*[jax.device_put(a, shard) for a in args])
+    return np.asarray(out[0] if ef else out)
+
+
+def _oracle_bound(sched, X, codec, mask=None):
+    """(ref, per-element bound): out row i mixes decode(encode(x_j)),
+    so |out − W·X| ≤ W_dense @ tolerance(X) (self terms are sent
+    uncompressed, making this an upper bound)."""
+    Wd = (masked_mixing_matrix(sched, mask) if mask is not None
+          else schedule_mixing_matrix(sched))
+    tol = np.asarray(get_codec(codec).tolerance(jnp.asarray(X)))
+    return Wd @ X, Wd @ tol + 1e-5
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("codec", ("int8-block", "topk"))
+@pytest.mark.parametrize("G", (1, 2, 4))
+@pytest.mark.parametrize("masked", (False, True))
+def test_compressed_fedlay_mix_matches_dense_oracle(codec, G, masked,
+                                                    multi_device):
+    n = 8 * G
+    sched = build_permute_schedule(n, 2, salt=f"wire{G}")
+    rng = np.random.default_rng(G)
+    X = rng.normal(size=(n, 150)).astype(np.float32)
+    mask = None
+    if masked:
+        mask = (rng.random(n) > 0.4).astype(np.float32)
+        mask[0] = 0.0
+    out = _mix_on_mesh(sched, X, codec, mask=mask)
+    ref, bound = _oracle_bound(sched, X, codec, mask=mask)
+    assert (np.abs(out - ref) <= bound).all(), \
+        float((np.abs(out - ref) - bound).max())
+    if masked:
+        dead = mask == 0
+        np.testing.assert_array_equal(out[dead], X[dead])
+
+
+@pytest.mark.multi_device
+def test_none_codec_path_bit_equals_codec_free_flat(multi_device):
+    """The exactness control arm: routing through the codec plumbing
+    with codec="none" reproduces the codec-free flat path bit-for-bit."""
+    n = 8
+    sched = build_permute_schedule(n, 3, salt="ctrl")
+    X = np.random.default_rng(0).normal(size=(n, 70)).astype(np.float32)
+    with_codec = _mix_on_mesh(sched, X, "none")
+    mesh = make_client_mesh(8, "data")
+    shard = NamedSharding(mesh, P("data"))
+    f = jax.jit(shard_map(
+        lambda x, w, s: fedlay_mix({"m": x}, sched, w, s, "data",
+                                   fuse="flat")["m"],
+        mesh=mesh, in_specs=(P("data"),) * 3, out_specs=P("data"),
+        check_vma=False))
+    plain = np.asarray(f(*[jax.device_put(a, shard) for a in (
+        jnp.asarray(X), jnp.asarray(sched.weights),
+        jnp.asarray(sched.self_weight))]))
+    np.testing.assert_array_equal(with_codec, plain)
+
+
+@pytest.mark.parametrize("codec", ("bf16", "int8-block"))
+@pytest.mark.parametrize("masked", (False, True))
+def test_compressed_global_mixer_matches_dense_oracle(codec, masked):
+    n = 8
+    sched = build_permute_schedule(n, 2, salt="gwire")
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(n, 90)).astype(np.float32)
+    tree = {"m": jnp.asarray(X)}
+    wire_codec = get_codec(codec)
+    ef = wire_codec.error_feedback
+    nflat = FlatSpec.for_tree({"m": tree["m"][:1]}).size
+    res0 = jnp.zeros((n, nflat), jnp.float32)
+    mix = jax.jit(global_mixer("fedlay", sched, masked=masked,
+                               codec=codec))
+    mask = None
+    args = [tree]
+    if masked:
+        mask = (rng.random(n) > 0.4).astype(np.float32)
+        mask[0] = 0.0
+        args.append(jnp.asarray(mask))
+    if ef:
+        args.append(res0)
+    out = mix(*args)
+    if ef:
+        out, _ = out
+    ref, bound = _oracle_bound(sched, X, codec, mask=mask)
+    got = np.asarray(out["m"])
+    assert (np.abs(got - ref) <= bound).all()
+
+
+# --------------------------------------------------------------------------
+# Error feedback: convergence parity + residual churn semantics
+# --------------------------------------------------------------------------
+
+def test_ef_consensus_tracks_exact_mixing():
+    """40 gossip rounds toward consensus with int8-block + EF on the
+    flat_io mixer: the lossy trajectory stays within ε of the exact
+    one, and far closer than the same codec without compensation."""
+    n, N = 8, 256
+    sched = build_permute_schedule(n, 2, salt="efconv")
+    rng = np.random.default_rng(0)
+    buf0 = rng.normal(size=(n, N)).astype(np.float32)
+    exact = jax.jit(global_mixer("fedlay", sched, fuse="flat",
+                                 flat_io=True))
+    ef_mix = jax.jit(global_mixer("fedlay", sched, codec="int8-block",
+                                  flat_io=True))
+    raw = get_codec("int8-block")
+
+    b_exact = jnp.asarray(buf0)
+    b_ef, res = jnp.asarray(buf0), jnp.zeros((n, N), jnp.float32)
+    b_raw = jnp.asarray(buf0)
+    for _ in range(40):
+        b_exact = exact(b_exact)
+        b_ef, res = ef_mix(b_ef, res)
+        # no-EF arm: decode(encode(x)) each round, mixed exactly
+        b_raw = exact(raw.decode(raw.encode(b_raw), N))
+    err_ef = float(np.abs(np.asarray(b_ef - b_exact)).max())
+    err_raw = float(np.abs(np.asarray(b_raw - b_exact)).max())
+    spread = float(np.abs(buf0 - buf0.mean(0)).max())
+    assert err_ef <= 0.02 * spread, (err_ef, spread)
+    assert err_ef < err_raw
+
+
+def test_ef_masked_rows_keep_residual_and_identity():
+    """A masked-out row neither mixes nor consumes its residual: its
+    buffer row passes through untouched and its residual is unchanged."""
+    n, N = 6, 128
+    sched = build_permute_schedule(n, 2, salt="efmask")
+    rng = np.random.default_rng(3)
+    buf = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32))
+    res0 = jnp.asarray(rng.normal(size=(n, N)).astype(np.float32))
+    mask = np.ones(n, np.float32)
+    mask[2] = 0.0
+    mix = jax.jit(global_mixer("fedlay", sched, masked=True,
+                               codec="int8-block", flat_io=True))
+    out, res = mix(buf, jnp.asarray(mask), res0)
+    np.testing.assert_array_equal(np.asarray(out)[2], np.asarray(buf)[2])
+    np.testing.assert_array_equal(np.asarray(res)[2], np.asarray(res0)[2])
+    alive = mask > 0
+    assert not np.array_equal(np.asarray(res)[alive],
+                              np.asarray(res0)[alive])
+
+
+def test_plan_reset_slots_covers_joiners_and_leavers():
+    from repro.runtime.slots import RemapPlan, plan_reset_slots
+    plan = RemapPlan(capacity=8, survivors=((0, 0), (2, 2)),
+                     joiners=((100, 3), (101, 5)), leavers=((7, 1),))
+    assert plan_reset_slots(plan) == (1, 3, 5)
+    assert plan_reset_slots(RemapPlan(capacity=8, survivors=(),
+                                      joiners=(), leavers=())) == ()
+
+
+# --------------------------------------------------------------------------
+# Control plane: cache keys, churn zero-retrace, bytes accounting
+# --------------------------------------------------------------------------
+
+def test_mixer_cache_keys_on_codec():
+    from repro.overlay.controller import MixerCache
+    built = []
+
+    def factory(sched):
+        built.append(sched)
+        return lambda p: p
+
+    cache = MixerCache(factory)
+    sched = build_permute_schedule(4, 1)
+    _, hit0 = cache.get(sched, "flat")
+    _, hit1 = cache.get(sched, "flat", get_codec("int8-block"))
+    _, hit2 = cache.get(sched, "flat", get_codec("int8-block"))
+    _, hit3 = cache.get(sched, "flat", get_codec("topk"))
+    assert (hit0, hit1, hit2, hit3) == (False, False, True, False)
+    assert len(built) == 3 and len(cache) == 3
+
+
+def _make_sim(n=12, L=2, seed=0):
+    from repro.core.ndmp import Simulator
+    sim = Simulator(num_spaces=L, latency=0.05, heartbeat_period=0.5,
+                    probe_period=1.0, seed=seed)
+    sim.seed_network(list(range(n)))
+    return sim
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("flat_io", (False, True))
+def test_grouped_codec_slot_loop_zero_retrace(flat_io, multi_device):
+    """The ISSUE 7 churn pin: the grouped capacity-mode loop (capacity
+    2 × devices, G = 2) with codec="int8-block" — compressed mixers and
+    the EF residual leaf hold zero retraces across ≥ 3 distinct alive
+    counts, with or without the resident flat buffer."""
+    from repro.optim.optimizers import sgd
+    from repro.overlay import ChurnTrace, OverlayController
+    from repro.runtime import SlotTrainLoop, counting_jit, masked_local_step
+
+    dim = 24
+
+    def make_params(u):
+        w = np.random.default_rng(u).normal(size=dim).astype(np.float32)
+        return {"w": jnp.asarray(w)}
+
+    def make_batch(node_ids, step):
+        rows = [np.random.default_rng(abs(hash((u, step))) % 2**32)
+                .normal(size=dim).astype(np.float32) for u in node_ids]
+        return {"x": jnp.asarray(np.stack(rows))}
+
+    def base_step(params, opt_state, batch):
+        w, x = params["w"], batch["x"]
+        loss = jnp.mean((w - x) ** 2, axis=-1)
+        return {"w": w - 0.05 * 2.0 * (w - x) / dim}, opt_state, \
+            {"loss": loss}
+
+    mesh = make_client_mesh(8, "data")
+    ctl = OverlayController(_make_sim(n=12), capacity=16,
+                            clients_per_device=2, codec="int8-block",
+                            flat_io=flat_io)
+    assert ctl.fuse == "flat"           # the codec implied it
+    sjit, scount = counting_jit(masked_local_step(base_step))
+    loop = SlotTrainLoop(
+        ctl, local_step=sjit, make_params=make_params, optimizer=sgd(0.0),
+        make_batch=make_batch, jit_local_step=False, mesh=mesh)
+    recs = loop.run(12, trace=ChurnTrace.scripted([
+        (2.5, "fail", 1), (4.5, "fail", 3),
+        (6.5, "join", 100, 0), (8.5, "join", 101, 0),
+    ]))
+    assert len({r.num_alive for r in recs}) >= 3
+    assert all(np.isfinite(r.loss) for r in recs)
+    assert scount.traces == 1 and scount.retraces == 0
+    assert ctl.cache.hits > 0
+    # the EF residual leaf exists, matches the flat width, and holds
+    # finite state after churn (remapped slots were zeroed, not stale)
+    assert loop.residual is not None
+    assert np.isfinite(np.asarray(loop.residual)).all()
+
+
+def test_controller_flat_io_requires_global_flat():
+    from repro.overlay import OverlayController
+    with pytest.raises(ValueError, match="flat_io"):
+        OverlayController(_make_sim(n=4), mixer_kind="shard_map",
+                          flat_io=True)
+
+
+def test_sync_bytes_codec_accounting():
+    # N is a FlatSpec width: always a multiple of LANE=128, so the int
+    # codecs' block padding never inflates the payload
+    N, n, L = 10_240, 16, 3
+    plain = sync_bytes_per_client("fedlay", 4 * N, n, L)
+    for name in ("bf16", "int8-block", "int4-block", "topk"):
+        codec = get_codec(name)
+        got = sync_bytes_per_client("fedlay", 4 * N, n, L, codec=name)
+        assert got == plain * codec.wire_bytes(N) // (4 * N) \
+            or got == 2 * L * codec.wire_bytes(N)
+    # int8-block: >= 3.5x on the wire incl. scales, 4x payload
+    int8 = get_codec("int8-block")
+    assert 4 * N / int8.wire_bytes(N) >= 3.5
+    assert 4 * N / int8.payload_bytes(N) >= 4.0
+    for name in ("int4-block", "topk"):
+        assert 4 * N / get_codec(name).wire_bytes(N) >= 4.0
+    # allreduce reduces in-network: codec ignored
+    assert sync_bytes_per_client("allreduce", 4 * N, n, L,
+                                 codec="int8-block") == \
+        sync_bytes_per_client("allreduce", 4 * N, n, L)
