@@ -1,16 +1,24 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dry-run JSONL files.
+dry-run JSONL files — or, with ``--history``, render the tracked
+``BENCH_history.jsonl`` perf trajectory as a markdown table (the CI
+job-summary step).
 
   PYTHONPATH=src python -m benchmarks.report > results/tables.md
+  PYTHONPATH=src python -m benchmarks.report --history >> "$GITHUB_STEP_SUMMARY"
 """
 
 from __future__ import annotations
 
+import argparse
+import datetime
 import json
 import os
 import sys
 
 ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+HISTORY_PATH = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
 
 
 def _load(path):
@@ -82,7 +90,78 @@ def perf_table(paths):
                   f"| {fmt(r['mem_temp_gib'])} |")
 
 
+def _history_records(path):
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except ValueError:
+                continue  # a truncated append never breaks the report
+    return out
+
+
+def _headline_perf(rows, limit=3):
+    """Up to ``limit`` ``key=value`` perf highlights from a history
+    record's rows (first occurrence of each distinct perf field)."""
+    from .run import perf_direction
+    seen = {}
+    for row in rows or []:
+        for key, val in row.items():
+            if (key not in seen and isinstance(val, (int, float))
+                    and not isinstance(val, bool)
+                    and perf_direction(key) is not None):
+                seen[key] = val
+        if len(seen) >= limit:
+            break
+    pairs = list(seen.items())[:limit]
+    return ", ".join(f"{k}={fmt(float(v), 3)}" for k, v in pairs)
+
+
+def history_table(path=HISTORY_PATH, last=30):
+    """The tracked perf trajectory, newest last, as one markdown table
+    (capped at the most recent ``last`` records)."""
+    records = _history_records(path)
+    print("\n### Benchmark history (BENCH_history.jsonl)\n")
+    if not records:
+        print(f"_no history at {os.path.relpath(path, REPO_ROOT)}_")
+        return
+    shown = records[-last:]
+    if len(records) > len(shown):
+        print(f"_{len(records) - len(shown)} earlier records elided_\n")
+    print("| date | sha | benchmark | mode | seconds | rows | status "
+          "| headline |")
+    print("|---|---|---|---|---|---|---|---|")
+    for rec in shown:
+        ts = rec.get("ts")
+        date = (datetime.datetime.fromtimestamp(ts).strftime("%Y-%m-%d")
+                if isinstance(ts, (int, float)) else "?")
+        rows = rec.get("rows") or []
+        print(f"| {date} | {rec.get('git_sha') or '?'} "
+              f"| {rec.get('benchmark', '?')} "
+              f"| {'quick' if rec.get('quick') else 'full'} "
+              f"| {fmt(float(rec.get('seconds', 0)))} | {len(rows)} "
+              f"| {'FAILED' if rec.get('failed') else 'ok'} "
+              f"| {_headline_perf(rows)} |")
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", nargs="?", const=HISTORY_PATH,
+                    default=None, metavar="PATH",
+                    help="render BENCH_history.jsonl (or PATH) as a "
+                         "markdown table instead of the dry-run tables")
+    ap.add_argument("--last", type=int, default=30,
+                    help="history records shown (newest last)")
+    args = ap.parse_args()
+    if args.history is not None:
+        history_table(args.history, last=args.last)
+        return
     single = _load("results/dryrun_single.jsonl")
     multi = _load("results/dryrun_multi.jsonl")
     dryrun_table(single, "Dry-run — single pod 16x16 (256 chips), "

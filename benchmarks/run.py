@@ -7,10 +7,14 @@ the roofline and the beyond-paper collective comparison.
 Default is quick mode (CPU-friendly); --full reproduces the paper-scale
 settings.  Output: CSV rows ``table,key=value,...``.  With ``--json``
 each benchmark additionally writes a machine-readable
-``BENCH_<name>.json`` at the repo root (rows + wall time + mode) and
-appends a slim record to the ``BENCH_history.jsonl`` append-log
-(untracked, uploaded as a CI artifact), so the perf trajectory
-accumulates across runs.  ``--baseline`` (implies ``--json``) compares
+``BENCH_<name>.json`` at the repo root (rows + wall time + mode + the
+run's :mod:`repro.obs` telemetry block) and appends a slim record to
+the ``BENCH_history.jsonl`` append-log (tracked in git, so the perf
+trajectory accumulates across commits; render it with
+``python -m benchmarks.report --history``).  Every benchmark runs
+under a scoped telemetry bus + round ledger, so any instrumented loop
+it drives lands its counters in the JSON for free.
+``--baseline`` (implies ``--json``) compares
 against the committed ``git HEAD`` copy of each ``BENCH_<name>.json``
 (falling back to the artifact on disk when untracked) and exits nonzero
 when any perf field regresses by more than 25% (lower-is-better
@@ -28,6 +32,8 @@ import sys
 import time
 import traceback
 from typing import Dict, List, Optional, Tuple
+
+from repro import obs
 
 from . import (churn_swap, cohort_stream, common, crosspod, fig3_topology,
                fig8_churn, fig11_noniid, fig12_async, fig13_locality,
@@ -63,10 +69,12 @@ REGRESSION_TOLERANCE = 0.25
 
 
 def _write_json(name: str, *, quick: bool, seconds: float, failed: bool,
-                rows) -> str:
+                rows, telemetry: Optional[Dict] = None) -> str:
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     payload = {"benchmark": name, "quick": quick,
                "seconds": round(seconds, 2), "failed": failed, "rows": rows}
+    if telemetry:
+        payload["telemetry"] = telemetry
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
@@ -210,8 +218,11 @@ def main() -> int:
                     if args.baseline else None)
         if args.json:
             common.start_json_capture()
+        bus = obs.Telemetry()
+        ledger = obs.RoundLedger(bus=bus)
         try:
-            mod.run(quick=not args.full)
+            with obs.telemetry(bus), obs.round_ledger(ledger):
+                mod.run(quick=not args.full)
         except Exception:  # noqa: BLE001 — keep the harness going
             failures.append(name)
             traceback.print_exc()
@@ -219,9 +230,16 @@ def main() -> int:
             if args.json:
                 rows = common.end_json_capture()
                 seconds = time.time() - t0
+                telem: Optional[Dict] = {}
+                counters = bus.summary()
+                if counters.get("counters") or counters.get("gauges"):
+                    telem["bus"] = counters
+                if len(ledger):
+                    telem["rounds"] = ledger.summary()
                 path = _write_json(name, quick=not args.full,
                                    seconds=seconds,
-                                   failed=name in failures, rows=rows)
+                                   failed=name in failures, rows=rows,
+                                   telemetry=telem or None)
                 _append_history(name, quick=not args.full, seconds=seconds,
                                 failed=name in failures, rows=rows)
                 print(f"# wrote {os.path.relpath(path, REPO_ROOT)} "

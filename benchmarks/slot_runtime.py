@@ -10,21 +10,32 @@ distinct alive count; the slot loop
 shape and traces exactly once.  Also checks the two loops' per-step
 losses agree to fp tolerance (the mask/pad machinery changes the
 layout, not the math) and reports steps/sec.
+
+Plus the **telemetry overhead** axis guarding the :mod:`repro.obs`
+zero-cost-when-disabled contract: the same slot loop timed with
+telemetry fully disabled (``obs.disabled()``) vs fully on (bus + round
+ledger), best-of-N to shed scheduler noise, emitting ``overhead_pct``
+and the ``overhead_ok`` (< 2%) flag CI asserts on.
 """
 
 from __future__ import annotations
 
+import contextlib
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.ndmp import Simulator
 from repro.optim.optimizers import sgd
 from repro.overlay import ChurnTrace, ChurnTrainLoop, OverlayController
 from repro.runtime import SlotTrainLoop, counting_jit, masked_local_step
 
 from .common import emit
+
+#: The obs contract: enabling telemetry may cost < this % of steps/s.
+OVERHEAD_BUDGET_PCT = 2.0
 
 
 def _make_sim(n: int, seed: int = 0) -> Simulator:
@@ -115,6 +126,53 @@ def run(quick: bool = False) -> None:
          max_abs_loss_diff=f"{diff:.2e}",
          slot_retraces=scount.retraces,
          restack_retraces=rcount.retraces)
+
+    # --- telemetry overhead: off vs on, same slot loop --------------------
+    # The signal (tens of us/step of host-side bookkeeping) is far below
+    # scheduler/frequency noise at small windows, so: a long timing
+    # window per rep, arms interleaved off/on/off/on to decorrelate
+    # drift, best-of-reps per arm.
+    reps = 4 if quick else 6
+    t_steps = max(steps * 8, 96)
+
+    def make_slot():
+        sj, sc = counting_jit(masked_local_step(base_step))
+        loop = SlotTrainLoop(
+            OverlayController(_make_sim(n), capacity=capacity),
+            local_step=sj, make_params=make_params, optimizer=opt,
+            make_batch=make_batch, jit_local_step=False)
+        return loop, sc
+
+    def arm_context(stack, telemetry_on: bool):
+        if telemetry_on:
+            stack.enter_context(obs.telemetry(obs.Telemetry()))
+            stack.enter_context(obs.round_ledger(obs.RoundLedger()))
+        else:
+            stack.enter_context(obs.disabled())
+
+    loops = {}
+    for on in (False, True):                  # warmup: compile + cache
+        loops[on] = make_slot()
+        with contextlib.ExitStack() as stack:
+            arm_context(stack, on)
+            loops[on][0].run(steps)
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(reps):
+        for on in (False, True):
+            with contextlib.ExitStack() as stack:
+                arm_context(stack, on)
+                t0 = time.perf_counter()
+                loops[on][0].run(t_steps)
+                best[on] = min(best[on], time.perf_counter() - t0)
+    off_sps, on_sps = t_steps / best[False], t_steps / best[True]
+    on_count = loops[True][1]
+    overhead_pct = max(0.0, (off_sps - on_sps) / off_sps * 100.0)
+    emit("slot_runtime_overhead", n0=n, capacity=capacity, dim=dim,
+         steps=t_steps, reps=reps,
+         off_steps_per_s=round(off_sps, 1), on_steps_per_s=round(on_sps, 1),
+         overhead_pct=round(overhead_pct, 2),
+         overhead_ok=int(overhead_pct < OVERHEAD_BUDGET_PCT),
+         on_retraces=on_count.retraces)
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from repro.core.dfl import Engine
 from repro.data.noniid import shard_partition
 from repro.data.synthetic import mnist_like
 from repro.models.small import MLPTask
+from repro.obs import RoundLedger, Telemetry
 
 
 def main():
@@ -43,15 +44,22 @@ def main():
     sim.run_for(20.0)
     print(f"after 5 abrupt failures:   correctness={sim.correctness():.3f}")
 
-    # 3. A miniature DFL run (MEP confidence weighting, async periods)
+    # 3. A miniature DFL run (MEP confidence weighting, async periods),
+    #    observed live through the repro.obs telemetry plane
     data = mnist_like(n_train=800, n_test=300)
     part = shard_partition(data.y_train, num_clients=10, shards_per_client=3)
     task = MLPTask(data, part, hidden=32, local_steps=2)
-    res = Engine().run(task, "fedlay", total_time=20.0, model_bytes=4096)
+    bus = Telemetry()
+    ledger = RoundLedger(bus=bus)
+    res = Engine().run(task, "fedlay", total_time=20.0, model_bytes=4096,
+                       telemetry=bus, ledger=ledger)
     print(f"DFL on non-iid shards: acc {res.trace[0].mean_acc:.2f} -> "
           f"{res.final_mean_acc:.2f} "
           f"({res.messages_per_client:.0f} msgs/client, "
           f"{res.suppressed_sends} duplicate sends suppressed)")
+    print()
+    print("per-round ledger (repro.obs):")
+    print(ledger.summary_table())
 
 
 if __name__ == "__main__":

@@ -208,7 +208,14 @@ def _register_builtin_methods() -> None:
 class _Recorder:
     """Trace + per-client communication/compute counters, shared by every
     engine loop (this is the scaffolding the four pre-registry loops each
-    duplicated)."""
+    duplicated).
+
+    Reports into the :mod:`repro.obs` plane: every snapshot ticks
+    ``engine.*`` signals on the telemetry bus and — when a round ledger
+    is installed — lands one ``loop="engine"`` record per evaluation
+    point (wire bytes = mean per-client bytes sent since the previous
+    snapshot); :meth:`result` flushes the run totals as ``engine.*``
+    counters.  All no-ops under the disabled-by-default globals."""
 
     def __init__(self, task: Task):
         self.task = task
@@ -218,6 +225,8 @@ class _Recorder:
         self.msgs_sent = np.zeros(self.n)
         self.local_steps = np.zeros(self.n)
         self.suppressed = 0
+        self._last_bytes = 0.0
+        self._last_steps = 0.0
 
     def snapshot(self, t: float, params: Sequence[np.ndarray]) -> None:
         cache: Dict[int, float] = {}      # distinct arrays evaluated once
@@ -228,8 +237,34 @@ class _Recorder:
         self.trace.append(TraceRow(
             time=t, mean_acc=float(accs.mean()), min_acc=float(accs.min()),
             max_acc=float(accs.max()), accs=accs))
+        from ..obs import get_telemetry
+        from ..obs.rounds import get_round_ledger
+        bus = get_telemetry()
+        if bus.enabled:
+            bus.count("engine.evals")
+            bus.gauge("engine.mean_acc", float(accs.mean()))
+        ledger = get_round_ledger()
+        if ledger is not None:
+            mean_b = float(self.bytes_sent.mean())
+            mean_s = float(self.local_steps.mean())
+            ledger.record(
+                round=len(self.trace) - 1, time=t, loop="engine",
+                num_alive=self.n, participating=self.n,
+                wire_bytes_per_client=mean_b - self._last_bytes,
+                payload_bytes_per_client=mean_b - self._last_bytes,
+                mean_acc=float(accs.mean()), min_acc=float(accs.min()),
+                max_acc=float(accs.max()),
+                local_steps_per_client=mean_s - self._last_steps)
+            self._last_bytes, self._last_steps = mean_b, mean_s
 
     def result(self, method: str, params: Sequence[np.ndarray]) -> RunResult:
+        from ..obs import get_telemetry
+        bus = get_telemetry()
+        if bus.enabled:
+            bus.count("engine.bytes_sent", float(self.bytes_sent.sum()))
+            bus.count("engine.msgs_sent", float(self.msgs_sent.sum()))
+            bus.count("engine.local_steps", float(self.local_steps.sum()))
+            bus.count("engine.suppressed", int(self.suppressed))
         return RunResult(
             method=method, trace=self.trace,
             comm_bytes_per_client=float(self.bytes_sent.mean()),
@@ -375,7 +410,8 @@ class Engine:
             total_time: float, model_bytes: int, base_period: float = 1.0,
             num_spaces: int = 3, periods: Optional[Sequence[float]] = None,
             seed: int = 0, eval_every: float = 0.0,
-            init_params: Optional[List[np.ndarray]] = None) -> RunResult:
+            init_params: Optional[List[np.ndarray]] = None,
+            telemetry=None, ledger=None) -> RunResult:
         """Run one DFL method end to end.
 
         ``periods`` overrides the paper's 3-tier heterogeneity model
@@ -383,7 +419,29 @@ class Engine:
         per-client models (churn experiments; gossip engine only).
         ``eval_every`` paces gossip trace snapshots — round-paced
         engines always snapshot once per round.
+
+        ``telemetry`` (a :class:`repro.obs.Telemetry`) and ``ledger``
+        (a :class:`repro.obs.rounds.RoundLedger`) scope the
+        :mod:`repro.obs` plane to this run: the bus/ledger are installed
+        for the duration and restored afterwards, and the run's
+        evaluation snapshots land as ``loop="engine"`` ledger records.
+        Without them the run reports into the process globals (no-ops
+        by default).
         """
+        if telemetry is not None or ledger is not None:
+            from ..obs.events import telemetry as telemetry_scope
+            from ..obs.rounds import round_ledger as ledger_scope
+            from contextlib import ExitStack
+            with ExitStack() as stack:
+                if telemetry is not None:
+                    stack.enter_context(telemetry_scope(telemetry))
+                if ledger is not None:
+                    stack.enter_context(ledger_scope(ledger))
+                return self.run(
+                    task, method, total_time=total_time,
+                    model_bytes=model_bytes, base_period=base_period,
+                    num_spaces=num_spaces, periods=periods, seed=seed,
+                    eval_every=eval_every, init_params=init_params)
         spec = resolve_method(method) if isinstance(method, str) else method
         n = task.num_clients
         if periods is None:

@@ -80,6 +80,8 @@ import numpy as np
 
 from ..core.mixing import PermuteSchedule, check_group_size, grouped_routing
 from ..kernels.weighted_mix import gather_mix, mix_accumulate
+from ..obs.events import get_telemetry
+from ..obs.profile import scope
 from ..wire.codec import WireCodec, get_codec
 from .flat import FlatSpec
 
@@ -253,27 +255,36 @@ def fedlay_mix(tree, sched: PermuteSchedule, weights: jnp.ndarray,
         spec = FlatSpec.for_tree(tree)
         buf = spec.ravel(tree)                       # (G, N) lane-padded
         if codec is not None:
-            if ef:
-                if residual.shape != buf.shape:
-                    raise ValueError(
-                        f"residual shape {residual.shape} != flat buffer "
-                        f"{buf.shape}")
-                wire, res = codec.encode_ef(buf + residual)
-                if masked:
-                    res = jnp.where((m > 0)[:, None], res, residual)
-            else:
-                wire, res = codec.encode(buf), None
+            # trace-time tick: codec paths run inside jit, so these
+            # count (re)compiles of the codec program — steady state
+            # with a warm MixerCache adds zero.
+            bus = get_telemetry()
+            bus.count("wire.encodes")
+            bus.count("wire.decodes", sched.num_slots)
+            with scope(f"wire.{codec.name}.encode"):
+                if ef:
+                    if residual.shape != buf.shape:
+                        raise ValueError(
+                            f"residual shape {residual.shape} != flat "
+                            f"buffer {buf.shape}")
+                    wire, res = codec.encode_ef(buf + residual)
+                    if masked:
+                        res = jnp.where((m > 0)[:, None], res, residual)
+                else:
+                    wire, res = codec.encode(buf), None
             acc = mix_accumulate(None, buf, self_w)
             for k in range(sched.num_slots):
-                wk = tuple(receive(part, k) for part in wire)
-                acc = codec.accumulate(acc, wk, slot_w[k])
+                with scope(f"fedlay_mix.slot{k}"):
+                    wk = tuple(receive(part, k) for part in wire)
+                    acc = codec.accumulate(acc, wk, slot_w[k])
             if masked:
                 acc = jnp.where(ok[:, None], acc, buf)
             out = spec.unravel(acc)
             return (out, res) if ef else out
         acc = mix_accumulate(None, buf, self_w)
         for k in range(sched.num_slots):
-            acc = mix_accumulate(acc, receive(buf, k), slot_w[k])
+            with scope(f"fedlay_mix.slot{k}"):
+                acc = mix_accumulate(acc, receive(buf, k), slot_w[k])
         if masked:
             acc = jnp.where(ok[:, None], acc, buf)
         return spec.unravel(acc)
@@ -522,14 +533,20 @@ def global_mixer(strategy: str,
                     if ok is not None:
                         ident = jnp.zeros_like(table).at[:, 0].set(1.0)
                         table = jnp.where(ok[:, None], table, ident)
-                    return gather_mix(buf, srcs, table), None
-                if ef:
-                    wire, res = codec.encode_ef(buf + residual)
-                else:
-                    wire, res = codec.encode(buf), None
-                out = mix_accumulate(None, buf, table[:, 0])
-                out = out + codec.gather(wire, srcs[:, 1:], table[:, 1:],
-                                         buf.shape[1])
+                    with scope("global_mixer.gather_mix"):
+                        return gather_mix(buf, srcs, table), None
+                bus = get_telemetry()           # trace-time tick (see
+                bus.count("wire.encodes")       # fedlay_mix): counts
+                bus.count("wire.decodes")       # codec (re)compiles
+                with scope(f"wire.{codec.name}.encode"):
+                    if ef:
+                        wire, res = codec.encode_ef(buf + residual)
+                    else:
+                        wire, res = codec.encode(buf), None
+                with scope(f"global_mixer.{codec.name}.gather"):
+                    out = mix_accumulate(None, buf, table[:, 0])
+                    out = out + codec.gather(wire, srcs[:, 1:],
+                                             table[:, 1:], buf.shape[1])
                 if ok is not None:
                     out = jnp.where(ok[:, None], out, buf)
                 return out, res

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..obs.profile import scope
 from .interpret import resolve_interpret
 
 #: TPU vector lane width — every block's minor dim must be a multiple.
@@ -173,24 +174,26 @@ def mix_accumulate(acc: Optional[jnp.ndarray], x: jnp.ndarray,
     row_spec = pl.BlockSpec((B, bn), lambda i: (0, i))
     w_spec = pl.BlockSpec((B, 1), lambda i: (0, 0))
     if acc is None:
-        out = pl.pallas_call(
-            _scale_kernel,
-            grid=(Np // bn,),
-            in_specs=[row_spec, w_spec],
-            out_specs=row_spec,
-            out_shape=jax.ShapeDtypeStruct((B, Np), x.dtype),
-            interpret=interp,
-        )(xs, w2)
+        with scope("kernels.mix_accumulate.init"):
+            out = pl.pallas_call(
+                _scale_kernel,
+                grid=(Np // bn,),
+                in_specs=[row_spec, w_spec],
+                out_specs=row_spec,
+                out_shape=jax.ShapeDtypeStruct((B, Np), x.dtype),
+                interpret=interp,
+            )(xs, w2)
         return out[:, :N]
     accs = jnp.pad(acc, ((0, 0), (0, pad))) if pad else acc
-    out = pl.pallas_call(
-        _accum_kernel,
-        grid=(Np // bn,),
-        in_specs=[row_spec, row_spec, w_spec],
-        out_specs=row_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Np), acc.dtype),
-        interpret=interp,
-    )(accs, xs, w2)
+    with scope("kernels.mix_accumulate"):
+        out = pl.pallas_call(
+            _accum_kernel,
+            grid=(Np // bn,),
+            in_specs=[row_spec, row_spec, w_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((B, Np), acc.dtype),
+            interpret=interp,
+        )(accs, xs, w2)
     return out[:, :N]
 
 
@@ -269,15 +272,16 @@ def gather_mix(buf: jnp.ndarray, srcs, weights: jnp.ndarray,
     bufs = jnp.pad(buf, ((0, 0), (0, pad))) if pad else buf
     Np = bufs.shape[1]
 
-    out = pl.pallas_call(
-        _gather_mix_kernel,
-        grid=(Np // bn,),
-        in_specs=[
-            pl.BlockSpec((C, C), lambda i: (0, 0)),
-            pl.BlockSpec((C, bn), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((C, bn), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((C, Np), buf.dtype),
-        interpret=interp,
-    )(W, bufs)
+    with scope("kernels.gather_mix"):
+        out = pl.pallas_call(
+            _gather_mix_kernel,
+            grid=(Np // bn,),
+            in_specs=[
+                pl.BlockSpec((C, C), lambda i: (0, 0)),
+                pl.BlockSpec((C, bn), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((C, bn), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((C, Np), buf.dtype),
+            interpret=interp,
+        )(W, bufs)
     return out[:, :N]

@@ -24,6 +24,7 @@ Runs on real multi-device meshes and on CPU via host-platform devices:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import sys
@@ -142,27 +143,63 @@ def run(args) -> Dict:
                                 seed=args.seed, client=c)) for c in range(n)]
 
     step_fn = make_dfl_step(cfg, optimizer, mixer, mesh, error_feedback=ef)
+
+    # opt-in observability: --telemetry-out installs a bus + per-round
+    # ledger for the run; --profile-dir wraps it in a profiler capture
+    from ..obs import (RoundLedger, Telemetry, capture, round_ledger,
+                       telemetry)
+    from ..dist.sync import sync_bytes_per_client
+    telemetry_out = getattr(args, "telemetry_out", None)
+    bus = Telemetry() if telemetry_out else None
+    ledger = RoundLedger(bus=bus) if telemetry_out else None
+    row_elems = sum(int(np.prod(l.shape[1:], dtype=np.int64))
+                    for l in jax.tree.leaves(params))
+    wire = sync_bytes_per_client(
+        args.sync, 4 * row_elems, n, num_spaces=args.spaces,
+        clients_per_device=G, codec=codec_name)
+    payload = (sync_bytes_per_client(
+        args.sync, 4 * row_elems, n, num_spaces=args.spaces,
+        clients_per_device=G) if codec_name is not None else wire)
+
     losses = []
     t0 = time.time()
-    for step in range(args.steps):
-        xs, ys = zip(*(next(s) for s in streams))
-        batch = {"tokens": jnp.asarray(np.stack(xs)),
-                 "labels": jnp.asarray(np.stack(ys))}
-        batch = jax.tree.map(lambda x: jax.device_put(x, shard_c), batch)
-        if ef:
-            params, opt_state, residual, loss = step_fn(
-                params, opt_state, batch, weights, self_w, residual)
-        else:
-            params, opt_state, loss = step_fn(params, opt_state, batch,
-                                              weights, self_w)
-        losses.append(float(loss))
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+    with contextlib.ExitStack() as stack_ctx:
+        if bus is not None:
+            stack_ctx.enter_context(telemetry(bus))
+            stack_ctx.enter_context(round_ledger(ledger))
+        if getattr(args, "profile_dir", None):
+            stack_ctx.enter_context(capture(args.profile_dir))
+        for step in range(args.steps):
+            xs, ys = zip(*(next(s) for s in streams))
+            batch = {"tokens": jnp.asarray(np.stack(xs)),
+                     "labels": jnp.asarray(np.stack(ys))}
+            batch = jax.tree.map(lambda x: jax.device_put(x, shard_c), batch)
+            if ef:
+                params, opt_state, residual, loss = step_fn(
+                    params, opt_state, batch, weights, self_w, residual)
+            else:
+                params, opt_state, loss = step_fn(params, opt_state, batch,
+                                                  weights, self_w)
+            losses.append(float(loss))
+            if ledger is not None:
+                bus.count("train.steps")
+                ledger.record(round=step, time=time.time() - t0,
+                              loop="train", num_alive=n, participating=n,
+                              loss=losses[-1],
+                              wire_bytes_per_client=wire,
+                              payload_bytes_per_client=payload)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                      f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
     result = {"sync": args.sync, "clients": n, "clients_per_device": G,
               "steps": args.steps, "codec": codec_name,
               "first_loss": losses[0], "final_loss": losses[-1],
               "losses": losses}
+    if ledger is not None:
+        rows = ledger.to_jsonl(telemetry_out)
+        result["telemetry"] = ledger.summary()
+        print(f"wrote {rows} round records to {telemetry_out}")
+        print(ledger.summary_table())
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f)
@@ -198,6 +235,13 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--telemetry-out", default=None, metavar="PATH",
+                    help="enable the repro.obs plane for this run and "
+                         "write the per-round ledger as JSONL to PATH "
+                         "(also prints the summary table)")
+    ap.add_argument("--profile-dir", default=None, metavar="PATH",
+                    help="capture a jax.profiler trace of the run into "
+                         "PATH (view with TensorBoard / Perfetto)")
     args = ap.parse_args()
     res = run(args)
     print(f"loss {res['first_loss']:.4f} -> {res['final_loss']:.4f}")

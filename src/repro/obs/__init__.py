@@ -1,0 +1,87 @@
+"""`repro.obs` — the unified telemetry plane.
+
+Every runtime layer of the stack reports into this package: the
+:class:`~repro.obs.events.Telemetry` bus carries typed counters,
+gauges, histograms, and span events; the
+:class:`~repro.obs.rounds.RoundLedger` joins them with data-plane facts
+into one record per training round; :mod:`repro.obs.profile` labels
+device timelines and captures profiles.  The paper's practicality
+claims (per-round communication cost, repair latency under churn,
+convergence progress — FedLay §V/§VI) are all observable live through
+this plane.
+
+Observability contract
+======================
+
+**Disabled by default, zero-cost when disabled.**  The global bus is
+the :data:`~repro.obs.events.NULL` no-op singleton and the global
+ledger is ``None`` until a caller opts in (:func:`enable`,
+``telemetry=...``, ``--telemetry-out``).  Instrumented code pays a
+no-op method call (or a single ``is not None`` test) per *round*, never
+per device op.
+
+**Host-side only, at step/swap boundaries.**  Instruments are plain
+Python updates recorded where the host already runs — controller
+steps, commits, remaps, loop-step boundaries.  Nothing is branched or
+called inside jitted code, so enabling telemetry cannot change traced
+programs: the 0-retrace and kernel-fusion guarantees are byte-for-byte
+untouched (the only in-trace construct is ``jax.named_scope``, which
+exists at trace time only).  The end-to-end cost is gated < 2% of
+steps/s by the ``telemetry_overhead`` axis of
+``benchmarks/slot_runtime``.
+
+**Event taxonomy.**  Names are ``<layer>.<signal>`` with unit suffixes
+(``_ms``, ``_bytes``).  The layers currently emitting:
+
+========================  ================================================
+prefix                    signals
+========================  ================================================
+``overlay.*``             ``rebuilds``, ``swaps``, ``cache_hits``,
+                          ``cache_misses``, ``churn_joins``,
+                          ``churn_leaves``, ``rebuild_ms`` (histogram),
+                          ``commit_ms`` (histogram)
+``slot.*`` / ``churn.*``  ``steps``, ``remaps``, ``num_alive`` /
+  / ``cohort.*``          ``participating`` (gauges), ``step_ms``
+                          (span histogram), ``wire_bytes`` counter
+``engine.*``              ``bytes_sent``, ``msgs_sent``, ``local_steps``,
+                          ``suppressed``, ``evals``
+``wire.*``                ``encodes``, ``decodes`` — ticked at *trace*
+                          time (codec paths run inside jit), so they
+                          count codec-program (re)compiles; zero in
+                          steady state with a warm MixerCache
+========================  ================================================
+
+**Adding a counter** is one line at a host boundary::
+
+    from ..obs import get_telemetry
+    get_telemetry().count("overlay.my_signal")
+
+No registration: the name shows up in :meth:`Telemetry.summary`, in
+BENCH JSON telemetry blocks, and — as a per-round delta — in any
+:class:`RoundLedger` bound to the bus.  Keep the ``<layer>.<signal>``
+convention and unit suffixes so downstream joins stay mechanical.
+
+**Per-round ledger.**  Loops accept ``ledger=`` (or pick up the global
+one) and emit one :class:`RoundRecord` per round: wire/payload bytes
+from the :func:`repro.dist.sync.sync_bytes_per_client` closed forms,
+retrace deltas from :class:`~repro.runtime.loop.TraceCount`, cache
+hit/miss and swap flags from the :class:`~repro.overlay.controller.
+ControlReport`, repair (schedule rebuild) and commit latencies, churn
+membership, masked loss/participation.  Export as JSONL
+(``--telemetry-out``) or a terminal table (``summary_table()``).
+"""
+
+from .events import (NULL, NullTelemetry, Telemetry, TelemetryEvent,
+                     disable, enable, get_telemetry, set_telemetry,
+                     telemetry)
+from .profile import annotation, capture, scope
+from .rounds import (RoundLedger, RoundRecord, disabled, get_round_ledger,
+                     round_ledger, set_round_ledger)
+
+__all__ = [
+    "NULL", "NullTelemetry", "Telemetry", "TelemetryEvent",
+    "disable", "enable", "get_telemetry", "set_telemetry", "telemetry",
+    "annotation", "capture", "scope",
+    "RoundLedger", "RoundRecord", "disabled", "get_round_ledger",
+    "round_ledger", "set_round_ledger",
+]

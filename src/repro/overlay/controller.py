@@ -53,6 +53,7 @@ from ..core.mep import ClientProfile
 from ..core.mixing import PermuteSchedule, schedule_from_addresses
 from ..core.ndmp import SimulatorProtocol
 from ..core.topology import Topology, fedlay_topology
+from ..obs import get_telemetry
 from .events import ChurnEvent, ChurnTrace, DeltaTracker, TableDelta
 
 MIXER_KINDS = ("global", "shard_map")
@@ -294,6 +295,7 @@ class OverlayController:
         self.cache = MixerCache(mixer_factory, maxsize=cache_size)
         self.rebuilds = 0
         self.swaps = 0
+        self.last_commit_ms = 0.0
         self._alive: Tuple[int, ...] = ()
         self._schedule: Optional[PermuteSchedule] = None
         self._alive_schedule: Optional[PermuteSchedule] = None
@@ -381,6 +383,19 @@ class OverlayController:
             self.last_plan = None
         swapped, rebuilt, cache_hit, rebuild_ms, alive = self._refresh(
             force=bool(delta.joined or delta.left))
+        bus = get_telemetry()
+        if bus.enabled:   # host-side, step-boundary only (repro.obs contract)
+            if delta.joined:
+                bus.count("overlay.churn_joins", len(delta.joined))
+            if delta.left:
+                bus.count("overlay.churn_leaves", len(delta.left))
+            if rebuilt:
+                bus.count("overlay.rebuilds")
+                bus.observe("overlay.rebuild_ms", rebuild_ms)
+            if swapped:
+                bus.count("overlay.swaps")
+            bus.count("overlay.cache_hits" if cache_hit
+                      else "overlay.cache_misses")
         return ControlReport(
             epoch=self.tracker.epoch, time=self.sim.now,
             alive=alive, delta=delta, swapped=swapped,
@@ -394,10 +409,22 @@ class OverlayController:
         :class:`~repro.runtime.slots.RemapPlan` of the most recent
         applied membership change (None when membership is unchanged or
         outside capacity mode) so slot train loops can turn it into
-        in-place row writes."""
+        in-place row writes.
+
+        :attr:`last_commit_ms` afterwards holds the host time the swap
+        took (0 when nothing was staged) — the per-round commit-latency
+        fact the :class:`repro.obs.rounds.RoundLedger` records."""
         if self._staged is not None:
             staged, self._staged = self._staged, None
+            t0 = _time.perf_counter()
             self._apply(staged)
+            self.last_commit_ms = (_time.perf_counter() - t0) * 1e3
+            bus = get_telemetry()
+            if bus.enabled:
+                bus.count("overlay.commits")
+                bus.observe("overlay.commit_ms", self.last_commit_ms)
+        else:
+            self.last_commit_ms = 0.0
         return self.last_plan
 
     # ---- internals -------------------------------------------------------

@@ -85,22 +85,42 @@ class ChurnTrainLoop:
                  optimizer,
                  make_batch: Callable[[Sequence[int], int], object],
                  step_time: float = 1.0,
-                 jit_local_step: bool = True):
+                 jit_local_step: bool = True,
+                 telemetry=None, ledger=None, trace_count=None):
+        """``telemetry`` / ``ledger`` / ``trace_count`` opt into the
+        :mod:`repro.obs` plane exactly as on
+        :class:`repro.runtime.SlotTrainLoop` — note this loop re-stacks
+        state per alive count, so its ledger shows a nonzero
+        ``retrace_delta`` at every *new* alive count (the tax the slot
+        runtime removes)."""
         import jax
+        from ..runtime.loop import TraceCount, counting_jit
 
         self.controller = controller
         self.optimizer = optimizer
         self.make_params = make_params
         self.make_batch = make_batch
         self.step_time = step_time
-        self.local_step = (jax.jit(local_step) if jit_local_step
-                           else local_step)
+        self._telemetry = telemetry
+        self._ledger = ledger
+        self.trace_count = (trace_count if trace_count is not None
+                            else TraceCount())
+        self._last_traces = 0
+        # closed-form wire/payload bytes memo keyed on (strategy, L, n)
+        self._bytes_cache: dict = {}
+        if jit_local_step:
+            self.local_step, self.trace_count = counting_jit(local_step)
+        else:
+            self.local_step = local_step
         self._jax = jax
 
         self.assignment: Tuple[int, ...] = controller.alive
         per_client = [make_params(u) for u in self.assignment]
         self.params = self._stack(per_client)
         self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self._row_elems = sum(
+            int(np.prod(l.shape[1:], dtype=np.int64))
+            for l in jax.tree.leaves(self.params))
         self.records: List[ChurnStepRecord] = []
 
     # ---- state surgery ---------------------------------------------------
@@ -148,10 +168,60 @@ class ChurnTrainLoop:
         self.assignment = new
         return tuple(joiners), left
 
+    # ---- telemetry -------------------------------------------------------
+    def _record_round(self, ledger, step: int, report, loss: float,
+                      joined, left) -> None:
+        from ..dist.sync import sync_bytes_per_client
+        ctl = self.controller
+        n = len(self.assignment)
+        key = (ctl.strategy, ctl.schedule.num_spaces, n)
+        cached = self._bytes_cache.get(key)
+        if cached is None:
+            row_bytes = 4 * self._row_elems
+            kwargs = dict(num_spaces=key[1],
+                          clients_per_device=ctl.clients_per_device)
+            wire = sync_bytes_per_client(ctl.strategy, row_bytes, n,
+                                         codec=ctl.codec, **kwargs)
+            payload = (sync_bytes_per_client(ctl.strategy, row_bytes, n,
+                                             **kwargs)
+                       if ctl.codec is not None else wire)
+            cached = self._bytes_cache[key] = (wire, payload)
+        wire, payload = cached
+        traces = self.trace_count.traces
+        delta, self._last_traces = traces - self._last_traces, traces
+        ledger.record(
+            round=step, time=report.time, loop="churn",
+            num_alive=n, participating=n, loss=loss,
+            wire_bytes_per_client=wire, payload_bytes_per_client=payload,
+            retraces=self.trace_count.retraces, retrace_delta=delta,
+            swapped=report.swapped, rebuilt=report.rebuilt,
+            cache_hit=report.cache_hit, joined=joined, left=left,
+            repair_ms=report.rebuild_ms, commit_ms=ctl.last_commit_ms)
+
     # ---- the loop --------------------------------------------------------
     def run(self, num_steps: int,
             trace: Optional[ChurnTrace] = None) -> List[ChurnStepRecord]:
-        """``num_steps`` training steps, one control interval each."""
+        """``num_steps`` training steps, one control interval each.
+
+        An explicit ``telemetry=``/``ledger=`` override on the loop is
+        installed as the process bus/ledger for the duration of the run,
+        so the controller's ``overlay.*`` counters land on the same
+        bus."""
+        import contextlib
+
+        from ..obs import get_telemetry, telemetry
+        from ..obs.rounds import get_round_ledger, round_ledger
+        stack = contextlib.ExitStack()
+        if self._telemetry is not None:
+            stack.enter_context(telemetry(self._telemetry))
+        if self._ledger is not None:
+            stack.enter_context(round_ledger(self._ledger))
+        with stack:
+            return self._run(num_steps, trace,
+                             get_telemetry, get_round_ledger)
+
+    def _run(self, num_steps, trace,
+             get_telemetry, get_round_ledger) -> List[ChurnStepRecord]:
         for step in range(num_steps):
             report = self.controller.step(self.step_time, trace=trace)
             # land any staged swap before touching state (no-op unless
@@ -167,10 +237,22 @@ class ChurnTrainLoop:
             # the hot-swap seam: whatever mixer the controller holds now
             self.params = self.controller.mixer(params)
             self.opt_state = opt_state
+            loss = float(np.asarray(metrics["loss"]))
             self.records.append(ChurnStepRecord(
                 step=step, time=report.time,
                 num_alive=len(self.assignment),
-                loss=float(np.asarray(metrics["loss"])),
+                loss=loss,
                 swapped=report.swapped, cache_hit=report.cache_hit,
                 joined=joined, left=left))
+            bus = (self._telemetry if self._telemetry is not None
+                   else get_telemetry())
+            if bus.enabled:
+                bus.count("churn.steps")
+                bus.gauge("churn.num_alive", len(self.assignment))
+                if joined or left:
+                    bus.count("churn.remaps")
+            ledger = (self._ledger if self._ledger is not None
+                      else get_round_ledger())
+            if ledger is not None:
+                self._record_round(ledger, step, report, loss, joined, left)
         return self.records

@@ -51,11 +51,19 @@ class TraceCount:
         return max(0, self.traces - 1)
 
 
-def counting_jit(fn: Callable) -> Tuple[Callable, TraceCount]:
-    """``jax.jit(fn)`` plus a :class:`TraceCount` that ticks once per
-    trace (compiled executions skip the Python body, so they don't
-    count).  The retrace-tax instrumentation used by
-    ``benchmarks/slot_runtime`` and ``benchmarks/cohort_stream``."""
+def counting_jit(fn: Callable, **jit_kwargs) -> Tuple[Callable, TraceCount]:
+    """``jax.jit(fn, **jit_kwargs)`` plus a :class:`TraceCount` that
+    ticks once per trace (compiled executions skip the Python body, so
+    they don't count).  The retrace-tax instrumentation used by
+    ``benchmarks/slot_runtime``, ``benchmarks/cohort_stream``, and the
+    per-round ``retrace_delta`` of :class:`repro.obs.rounds.RoundLedger`.
+
+    ``jit_kwargs`` pass straight through to ``jax.jit``
+    (``donate_argnums``, ``static_argnums``, ...).  The counter ticks
+    per trace of the *wrapped* body: calling the result from inside
+    another jitted function counts that one (inlined) trace, and
+    distinct static-arg values or donated-buffer shapes each count
+    their own trace, exactly like jax's own cache."""
     import jax
 
     counter = TraceCount()
@@ -63,7 +71,7 @@ def counting_jit(fn: Callable) -> Tuple[Callable, TraceCount]:
     def counted(*args, **kwargs):
         counter.traces += 1
         return fn(*args, **kwargs)
-    return jax.jit(counted), counter
+    return jax.jit(counted, **jit_kwargs), counter
 
 
 # ---- capacity-row surgery (shared by SlotTrainLoop and the cohort
@@ -161,7 +169,16 @@ class SlotTrainLoop:
                  periods: Optional[Dict[int, float]] = None,
                  step_time: float = 1.0,
                  jit_local_step: bool = True,
-                 mesh=None, client_axis: str = "data"):
+                 mesh=None, client_axis: str = "data",
+                 telemetry=None, ledger=None, trace_count=None):
+        """``telemetry`` / ``ledger`` opt into the :mod:`repro.obs`
+        plane: an explicit bus / :class:`~repro.obs.rounds.RoundLedger`
+        to report into (default: the process globals, which are the
+        no-op bus / no ledger until enabled).  With ``jit_local_step``
+        the step is jitted through :func:`counting_jit` and
+        :attr:`trace_count` tracks its traces; callers that jit their
+        own step (``jit_local_step=False``) may pass the matching
+        ``trace_count`` so per-round retrace deltas stay observable."""
         import jax
 
         if controller.slots is None:
@@ -187,6 +204,14 @@ class SlotTrainLoop:
         self.step_time = step_time
         self._jax = jax
         self._step = 0
+        self._telemetry = telemetry
+        self._ledger = ledger
+        self.trace_count = (trace_count if trace_count is not None
+                            else TraceCount())
+        self._last_traces = 0
+        # closed-form wire/payload bytes memo keyed on (strategy, L,
+        # participating) — _record_round runs every step on the host
+        self._bytes_cache: Dict[tuple, tuple] = {}
 
         # capacity-stacked state: live slots get their node's init, dead
         # slots zeros (their rows are masked and mixed as self-loops)
@@ -226,12 +251,22 @@ class SlotTrainLoop:
                 p, o, m = local_step(spec.unravel(buf), opt_state,
                                      batch, mask)
                 return spec.ravel(p), o, m
-            self.local_step = (jax.jit(flat_step) if jit_local_step
-                               else flat_step)
+            if jit_local_step:
+                self.local_step, self.trace_count = counting_jit(flat_step)
+            else:
+                self.local_step = flat_step
         else:
             self.params = self._shard_rows(stacked)
-            self.local_step = (jax.jit(local_step) if jit_local_step
-                               else local_step)
+            if jit_local_step:
+                self.local_step, self.trace_count = counting_jit(local_step)
+            else:
+                self.local_step = local_step
+        # per-client flat-row element count, for the ledger's closed-form
+        # wire accounting (lane-padded when a FlatSpec exists — that is
+        # what a codec actually ships)
+        self._row_elems = (self._spec.size if self._spec is not None
+                           else sum(int(np.prod(l.shape[1:], dtype=np.int64))
+                                    for l in jax.tree.leaves(stacked)))
         self.residual = (self._shard_rows(jax.numpy.zeros(
             (self.capacity, self._spec.size), jax.numpy.float32))
             if self.ef else None)
@@ -340,12 +375,69 @@ class SlotTrainLoop:
         return self._jax.tree.map(
             lambda l: jnp.take(l, gather, axis=0), batch)
 
+    # ---- telemetry -------------------------------------------------------
+    def _record_round(self, ledger, step: int, report, participating: int,
+                      loss: float, joined, left) -> None:
+        """One :class:`repro.obs.rounds.RoundRecord`: the closed-form
+        wire/payload bytes for this round's participation, the retrace
+        delta, and the control-plane latencies (repair = the schedule
+        rebuild NDMP churn forced, commit = the staged-swap flip)."""
+        from ..dist.sync import sync_bytes_per_client
+        ctl = self.controller
+        key = (ctl.strategy, ctl.schedule.num_spaces,
+               max(int(participating), 1))
+        cached = self._bytes_cache.get(key)
+        if cached is None:
+            row_bytes = 4 * self._row_elems
+            kwargs = dict(num_spaces=key[1],
+                          clients_per_device=ctl.clients_per_device,
+                          active_clients=key[2])
+            wire = sync_bytes_per_client(ctl.strategy, row_bytes,
+                                         self.capacity, codec=ctl.codec,
+                                         **kwargs)
+            payload = (sync_bytes_per_client(ctl.strategy, row_bytes,
+                                             self.capacity, **kwargs)
+                       if ctl.codec is not None else wire)
+            cached = self._bytes_cache[key] = (wire, payload)
+        wire, payload = cached
+        traces = self.trace_count.traces
+        delta, self._last_traces = traces - self._last_traces, traces
+        ledger.record(
+            round=step, time=report.time, loop="slot",
+            num_alive=len(report.alive), participating=int(participating),
+            loss=loss, wire_bytes_per_client=wire,
+            payload_bytes_per_client=payload,
+            retraces=self.trace_count.retraces, retrace_delta=delta,
+            swapped=report.swapped, rebuilt=report.rebuilt,
+            cache_hit=report.cache_hit, joined=joined, left=left,
+            repair_ms=report.rebuild_ms, commit_ms=ctl.last_commit_ms)
+
     # ---- the loop --------------------------------------------------------
     def run(self, num_steps: int,
             trace: Optional[ChurnTrace] = None) -> List[SlotStepRecord]:
-        """``num_steps`` training steps, one control interval each."""
+        """``num_steps`` training steps, one control interval each.
+
+        An explicit ``telemetry=``/``ledger=`` override on the loop is
+        installed as the process bus/ledger for the duration of the run,
+        so the whole stack underneath (controller ``overlay.*``
+        counters, codec trace ticks) reports to the same place."""
+        import contextlib
+
         jnp = self._jax.numpy
         ctl = self.controller
+        from ..obs import get_telemetry, telemetry
+        from ..obs.rounds import get_round_ledger, round_ledger
+        stack = contextlib.ExitStack()
+        if self._telemetry is not None:
+            stack.enter_context(telemetry(self._telemetry))
+        if self._ledger is not None:
+            stack.enter_context(round_ledger(self._ledger))
+        with stack:
+            return self._run(num_steps, trace, jnp, ctl,
+                             get_telemetry, get_round_ledger)
+
+    def _run(self, num_steps, trace, jnp, ctl,
+             get_telemetry, get_round_ledger) -> List[SlotStepRecord]:
         for _ in range(num_steps):
             step = self._step
             report = ctl.step(self.step_time, trace=trace)
@@ -371,11 +463,23 @@ class SlotTrainLoop:
                 mixed = ctl.mixer(params, mix_mask)
             self.params = self._shard_rows(mixed)
             self.opt_state = self._shard_rows(opt_state)
+            part = int(np.asarray(mix_mask).sum())
+            loss = float(np.asarray(metrics["loss"]))
             self.records.append(SlotStepRecord(
                 step=step, time=report.time, num_alive=len(alive),
-                participating=int(np.asarray(mix_mask).sum()),
-                loss=float(np.asarray(metrics["loss"])),
+                participating=part, loss=loss,
                 swapped=report.swapped, cache_hit=report.cache_hit,
                 joined=joined, left=left))
+            bus = (self._telemetry if self._telemetry is not None
+                   else get_telemetry())
+            if bus.enabled:
+                bus.count("slot.steps")
+                bus.gauge("slot.num_alive", len(alive))
+                bus.gauge("slot.participating", part)
+            ledger = (self._ledger if self._ledger is not None
+                      else get_round_ledger())
+            if ledger is not None:
+                self._record_round(ledger, step, report, part, loss,
+                                   joined, left)
             self._step += 1
         return self.records

@@ -348,6 +348,9 @@ class CohortStreamLoop:
 
     def run(self, num_rounds: int) -> List[CohortRoundRecord]:
         jnp = self._jnp
+        from ..obs import get_telemetry
+        from ..obs.rounds import get_round_ledger
+        last_traces = self.trace_count.traces
         for _ in range(num_rounds):
             r = self._round
             self.sim.advance(self.round_time)
@@ -375,5 +378,36 @@ class CohortStreamLoop:
                 restored=restored, donor_seeded=donor_seeded, fresh=fresh,
                 remap_ms=remap_ms, retraces=self.trace_count.retraces,
                 evicted=evicted))
+            bus = get_telemetry()
+            if bus.enabled:
+                bus.count("cohort.rounds")
+                bus.count("cohort.streamed_in", len(plan.joiners))
+                bus.count("cohort.streamed_out", len(plan.leavers))
+                if evicted:
+                    bus.count("cohort.park_evictions", evicted)
+                bus.gauge("cohort.parked", len(self.park))
+                bus.observe("cohort.remap_ms", remap_ms)
+            ledger = get_round_ledger()
+            if ledger is not None:
+                from ..dist.sync import sync_bytes_per_client
+                wire = sync_bytes_per_client(
+                    "fedlay", 4 * self.dim, self.capacity,
+                    num_spaces=self.num_spaces,
+                    active_clients=len(cohort))
+                traces = self.trace_count.traces
+                delta, last_traces = traces - last_traces, traces
+                ledger.record(
+                    round=r, time=self.sim.now, loop="cohort",
+                    num_alive=len(cohort), participating=len(cohort),
+                    wire_bytes_per_client=wire,
+                    payload_bytes_per_client=wire,
+                    retraces=self.trace_count.retraces,
+                    retrace_delta=delta,
+                    swapped=bool(plan.changed), rebuilt=True,
+                    joined=tuple(u for u, _ in plan.joiners),
+                    left=tuple(u for u, _ in plan.leavers),
+                    repair_ms=remap_ms,
+                    restored=restored, donor_seeded=donor_seeded,
+                    fresh=fresh, evicted=evicted)
             self._round += 1
         return self.records

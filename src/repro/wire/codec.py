@@ -85,6 +85,7 @@ from ..kernels.weighted_mix import gather_mix, mix_accumulate
 from ..kernels.wire_codec import (dequant_accumulate, dequantize_block,
                                   gather_mix_int8, padded_width,
                                   quantize_block)
+from ..obs.profile import scope
 
 Wire = Tuple[jnp.ndarray, ...]
 
@@ -131,9 +132,10 @@ class WireCodec:
         """(wire, residual = buf − decode(wire)).  Generic form decodes
         once; fused codecs override (int8 computes the residual inside
         the quantize kernel)."""
-        wire = self.encode(buf)
-        return wire, buf.astype(jnp.float32) - self.decode(wire,
-                                                           buf.shape[1])
+        with scope(f"wire.{self.name}.encode_ef"):
+            wire = self.encode(buf)
+            return wire, buf.astype(jnp.float32) - self.decode(
+                wire, buf.shape[1])
 
     # ---- fused receive hooks ---------------------------------------------
     def accumulate(self, acc: Optional[jnp.ndarray], wire: Wire,
@@ -142,14 +144,16 @@ class WireCodec:
         Generic form materializes one decoded buffer (never a 2L
         stack); fused codecs dequantize in-kernel."""
         n = acc.shape[1]
-        return mix_accumulate(acc, self.decode(wire, n), w)
+        with scope(f"wire.{self.name}.decode"):
+            return mix_accumulate(acc, self.decode(wire, n), w)
 
     def gather(self, wire: Wire, srcs, weights: jnp.ndarray,
                n: int) -> jnp.ndarray:
         """Round-matrix mixing over the encoded population — the global
         fused receive.  Generic form decodes once then calls
         :func:`~repro.kernels.weighted_mix.gather_mix`."""
-        return gather_mix(self.decode(wire, n), srcs, weights)
+        with scope(f"wire.{self.name}.decode"):
+            return gather_mix(self.decode(wire, n), srcs, weights)
 
 
 @dataclasses.dataclass(frozen=True)
