@@ -38,8 +38,8 @@ from repro import obs
 from . import (churn_swap, cohort_stream, common, crosspod, fig3_topology,
                fig8_churn, fig11_noniid, fig12_async, fig13_locality,
                fig15_compute_cost, fig16_confidence, fig18_churn_accuracy,
-               fig20_scalability, mix_fusion, roofline, slot_runtime,
-               sync_collectives, table3_accuracy)
+               fig20_scalability, mix_fusion, roofline, serve_load,
+               slot_runtime, sync_collectives, table3_accuracy)
 
 MODULES = {
     "fig3": fig3_topology,
@@ -59,6 +59,7 @@ MODULES = {
     "slot_runtime": slot_runtime,
     "mix_fusion": mix_fusion,
     "cohort_stream": cohort_stream,
+    "serve_load": serve_load,
 }
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))

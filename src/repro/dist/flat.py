@@ -128,3 +128,19 @@ class FlatSpec:
             seg = jax.lax.slice_in_dim(buf, off, off + size, axis=1)
             leaves.append(jnp.reshape(seg, (self.batch,) + shape).astype(dt))
         return self.treedef.unflatten(leaves)
+
+    def unravel_row(self, row: jnp.ndarray):
+        """One (N,) flat row → the per-client tree *without* the batch
+        dim (leaf l gets shape ``shapes[l]``).  The serving plane's hot
+        model-reload seam: a single client's trained weights lift
+        straight out of the training loop's flat buffer into a
+        ready-to-serve parameter tree — no host round-trip, no re-stack.
+        """
+        if row.shape != (self.size,):
+            raise ValueError(f"row shape {row.shape} != ({self.size},)")
+        leaves = []
+        for shape, dt, off, size in zip(self.shapes, self.dtypes,
+                                        self.offsets, self.sizes):
+            seg = jax.lax.slice_in_dim(row, off, off + size, axis=0)
+            leaves.append(jnp.reshape(seg, shape).astype(dt))
+        return self.treedef.unflatten(leaves)

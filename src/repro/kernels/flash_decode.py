@@ -1,18 +1,33 @@
 """Pallas TPU kernel: single-token GQA flash-decode attention.
 
-The serving hot spot for ``decode_32k`` / ``long_500k``: one query token
-per sequence against a (L, Hkv, hd) KV cache.  Memory-bound — the whole
-cache streams through VMEM once; the online-softmax accumulator lives in
-VMEM scratch so nothing O(L) is ever written back to HBM:
+The serving hot spot for ``decode_32k`` / ``long_500k`` and the
+continuous-batching serving plane (:mod:`repro.runtime.serving`): one
+query token per sequence against a (L, Hkv, hd) KV cache.  Memory-bound
+— the whole cache streams through VMEM once; the online-softmax
+accumulator lives in VMEM scratch so nothing O(L) is ever written back
+to HBM:
 
   HBM traffic = 2 · L · hd · sizeof(dtype) per (batch, kv-head)  (optimal)
 
 Grid: (B, Hkv, L/BL) with the L dimension innermost (sequential):
 scratch m/l/acc carry across L blocks; the (G, hd) output tile is
-written once on the last block.  BL is lane-aligned (multiples of 128);
-the q·Kᵀ and p·V contractions are (G, hd)×(hd, BL) and (G, BL)×(BL, hd)
-matmuls that feed the MXU when G ≥ 8 — exactly the GQA regime of the
-assigned architectures.
+written once on the last block.  BL is lane-aligned (multiples of 128;
+``pick_block_l`` — a bare ``min(block_l, L)`` was TPU-invalid for
+128 < L < block_l with L % 128 != 0, the same class of bug as the PR 3
+``weighted_mix`` tile); the q·Kᵀ and p·V contractions are
+(G, hd)×(hd, BL) and (G, BL)×(BL, hd) matmuls that feed the MXU when
+G ≥ 8 — exactly the GQA regime of the assigned architectures.
+
+Per-slot positions
+------------------
+``pos`` is either a scalar (legacy whole-batch position) or a ``(B,)``
+vector carrying each batch row's own absolute position — the contract
+continuous batching needs, where every request slot sits at a different
+decode depth.  Rows with ``pos < 0`` are **empty slots**: every cache
+entry is masked invalid and the output row is exactly zero (the online
+softmax multiplies the probability tile by the validity mask, so an
+all-masked row accumulates l = 0 instead of the uniform-weight garbage
+a plain ``exp(s - max)`` would produce).
 """
 
 from __future__ import annotations
@@ -24,9 +39,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .interpret import resolve_interpret
+from .weighted_mix import LANE, aligned_block_n
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def pick_block_l(L: int, block_l: int) -> int:
+    """The lane-aligned KV block actually used for an L-slot cache: the
+    smallest multiple of 128 covering L, capped at ``block_l`` (itself
+    rounded up to a lane multiple)."""
+    return aligned_block_n(L, block_l, lane=LANE)
 
 
 def _decode_kernel(nblocks, block_l, q_ref, k_ref, v_ref, pos_ref, o_ref,
@@ -47,14 +70,18 @@ def _decode_kernel(nblocks, block_l, q_ref, k_ref, v_ref, pos_ref, o_ref,
                             preferred_element_type=jnp.float32)
     s = s * (hd ** -0.5)                                 # (G, BL)
 
-    # validity: absolute slot index <= pos (prefix-cache semantics)
+    # validity: absolute slot index <= this row's pos (prefix-cache
+    # semantics; pos < 0 masks the whole row — empty serving slot)
     pos = pos_ref[0, 0]
     idx = li * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(idx <= pos, s, NEG_INF)
+    valid = idx <= pos
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev, l_prev, acc_prev = m_s[...], l_s[...], acc_s[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))   # (G, 1)
-    p = jnp.exp(s - m_new)                                        # (G, BL)
+    # multiply by the mask: on an all-invalid block s - m_new == 0, and
+    # a bare exp would contribute uniform weight 1 per masked entry
+    p = jnp.exp(s - m_new) * valid.astype(jnp.float32)            # (G, BL)
     alpha = jnp.exp(m_prev - m_new)
     l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
     acc_new = acc_prev * alpha + jax.lax.dot_general(
@@ -71,16 +98,21 @@ def _decode_kernel(nblocks, block_l, q_ref, k_ref, v_ref, pos_ref, o_ref,
 def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                  pos: jnp.ndarray, block_l: int = 512,
                  interpret: bool | None = None) -> jnp.ndarray:
-    """q: (B, Hq, hd); caches: (B, L, Hkv, hd); pos: scalar int32.
+    """q: (B, Hq, hd); caches: (B, L, Hkv, hd); pos: scalar or (B,) int32.
 
     Returns (B, Hq, hd).  Slots with index > pos are masked (prefix
     semantics; ring-buffer windows pass pos = L-1 once the buffer is
-    full).  L is padded to a block multiple internally.
+    full); rows with pos < 0 are empty slots and come back exactly
+    zero.  L is padded to a lane-aligned block multiple internally.
     """
     B, Hq, hd = q.shape
     _, L, Hkv, _ = k_cache.shape
+    if Hkv < 1 or Hq % Hkv:
+        raise ValueError(
+            f"flash_decode requires Hq to be an integer multiple of Hkv "
+            f"(GQA query groups); got Hq={Hq}, Hkv={Hkv}")
     G = Hq // Hkv
-    bl = min(block_l, L)
+    bl = pick_block_l(L, block_l)
     pad = (-L) % bl
     if pad:
         zk = jnp.zeros((B, pad, Hkv, hd), k_cache.dtype)
@@ -92,7 +124,12 @@ def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     qg = q.reshape(B, Hkv, G, hd)
     kc = k_cache.transpose(0, 2, 1, 3)                   # (B, Hkv, Lp, hd)
     vc = v_cache.transpose(0, 2, 1, 3)
-    pos2 = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim > 1 or (pos.ndim == 1 and pos.shape[0] != B):
+        raise ValueError(
+            f"pos must be a scalar or a ({B},) per-slot vector, got shape "
+            f"{pos.shape}")
+    pos2 = jnp.broadcast_to(pos.reshape(-1), (B,)).reshape(B, 1)
 
     kern = functools.partial(_decode_kernel, nblocks, bl)
     out = pl.pallas_call(
@@ -102,7 +139,7 @@ def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
             pl.BlockSpec((1, 1, G, hd), lambda b, h, l: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bl, hd), lambda b, h, l: (b, h, l, 0)),
             pl.BlockSpec((1, 1, bl, hd), lambda b, h, l: (b, h, l, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, l: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, l: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, l: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),

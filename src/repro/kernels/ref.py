@@ -44,16 +44,21 @@ def gather_mix_ref(buf: jnp.ndarray, srcs, weights: jnp.ndarray) -> jnp.ndarray:
 
 def flash_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, pos) -> jnp.ndarray:
-    """q (B, Hq, hd) vs caches (B, L, Hkv, hd), prefix-valid ≤ pos."""
+    """q (B, Hq, hd) vs caches (B, L, Hkv, hd), prefix-valid ≤ pos.
+
+    ``pos`` is a scalar or a per-slot (B,) vector; rows with pos < 0
+    are empty serving slots and come back exactly zero (the softmax row
+    is multiplied by its validity mask, matching the kernel)."""
     B, Hq, hd = q.shape
     L, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
     s = jnp.einsum("bhgd,blhd->bhgl", qg, k_cache.astype(jnp.float32))
     s = s * (hd ** -0.5)
-    valid = jnp.arange(L) <= pos
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    valid = jnp.arange(L, dtype=jnp.int32)[None, :] <= pos[:, None]  # (B, L)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1) * valid[:, None, None, :]
     out = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, Hq, hd).astype(q.dtype)
 

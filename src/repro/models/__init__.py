@@ -4,10 +4,11 @@
 from .config import (ArchConfig, HybridConfig, InputShape, INPUT_SHAPES,
                      MLAConfig, MoEConfig, SSMConfig, reduce_for_smoke)
 from .model import (decode_step, forward, init_cache, init_params,
-                    train_loss)
+                    prefill, train_loss)
 
 __all__ = [
     "ArchConfig", "HybridConfig", "InputShape", "INPUT_SHAPES",
     "MLAConfig", "MoEConfig", "SSMConfig", "reduce_for_smoke",
-    "decode_step", "forward", "init_cache", "init_params", "train_loss",
+    "decode_step", "forward", "init_cache", "init_params", "prefill",
+    "train_loss",
 ]

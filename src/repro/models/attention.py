@@ -16,6 +16,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .layers import apply_rope, dense_init, matmul, rmsnorm, rmsnorm_init
 
@@ -168,6 +169,14 @@ def gqa_apply(p: dict, x: jnp.ndarray, *, num_heads: int, num_kv_heads: int,
 # Decode: one token against a (possibly ring-buffered) KV cache
 # --------------------------------------------------------------------------
 
+# When True, gqa_decode dispatches cache attention (window=None path) to
+# the Pallas flash_decode kernel instead of the pure-jnp oracle — the
+# serving plane's --kernel flag.  Trace-time knob: flip it before the
+# decode step is jitted.  Off by default (on CPU the kernel runs in
+# interpret mode: correct but slow).
+DECODE_KERNEL = False
+
+
 def init_kv_cache(batch: int, cache_len: int, num_kv_heads: int,
                   head_dim: int, dtype=jnp.float32) -> dict:
     return {
@@ -176,26 +185,76 @@ def init_kv_cache(batch: int, cache_len: int, num_kv_heads: int,
     }
 
 
+def _check_cache_overflow(pos, cache_len: int) -> None:
+    """Raise when a concrete prefix-cache position is past the end.
+
+    The old path silently let ``dynamic_update_slice`` clamp the write
+    to the last slot, overwriting whatever was there — a wrong-answer
+    bug, not an error.  ``pos`` is only checkable when concrete (eager
+    decode, host-driven loops); under jit the serving plane guards
+    host-side (:class:`repro.runtime.serving.ServeLoop` tracks per-slot
+    positions) because a traced value cannot raise.  Ring-buffer reuse
+    is the *windowed* path — prefix caches never wrap."""
+    if isinstance(pos, jax.core.Tracer):
+        return
+    p = np.asarray(pos)
+    if p.size and int(p.max()) >= cache_len:
+        raise ValueError(
+            f"decode position {int(p.max())} overflows the {cache_len}-slot "
+            f"prefix KV cache; grow cache_len (or use a sliding window — "
+            f"ring-buffer reuse is the windowed path)")
+
+
+def _positions_vector(pos, batch: int) -> jnp.ndarray:
+    """Normalize scalar-or-(B,) ``pos`` to a (B,) int32 vector."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim > 1 or (pos.ndim == 1 and pos.shape[0] != batch):
+        raise ValueError(
+            f"pos must be a scalar or a ({batch},) per-slot vector, got "
+            f"shape {pos.shape}")
+    return jnp.broadcast_to(pos.reshape(-1), (batch,))
+
+
 def gqa_decode(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray, *,
                num_heads: int, num_kv_heads: int, head_dim: int,
                rope_theta: float, rms_eps: float = 1e-5,
                window: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
     """One-token decode.  x: (B, 1, D); ``pos``: scalar int32 absolute
-    position.  The cache holds ``cache_len`` slots; with a sliding
-    window the cache is a ring buffer of exactly ``window`` slots.
-    Returns (attn_out (B,1,D), new_cache).
+    position shared by the batch, or a per-slot (B,) vector (continuous
+    batching: every request sits at its own depth; rows with pos < 0
+    are empty slots — nothing valid, zero attention output, and the
+    row's write lands harmlessly inside its own dead cache row).  The
+    cache holds ``cache_len`` slots; with a sliding window the cache is
+    a ring buffer of exactly ``window`` slots.  Without a window a
+    concrete pos >= cache_len raises instead of silently overwriting
+    the last slot.  Returns (attn_out (B,1,D), new_cache).
     """
     B = x.shape[0]
     cache_len = cache["k"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    if window is None:
+        _check_cache_overflow(pos, cache_len)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_vec = _positions_vector(pos, B)
     q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
-                           positions, rope_theta, rms_eps)
-    slot = pos % cache_len if window is not None else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    out = cache_attention(q, ck, cv, pos, window=window)
+                           pos_vec[:, None], rope_theta, rms_eps)
+    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if pos.ndim == 0:
+        # legacy whole-batch position: one slice write for all rows
+        slot = pos % cache_len if window is not None else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, slot, 0, 0))
+    else:
+        slot = (pos_vec % cache_len if window is not None
+                else jnp.clip(pos_vec, 0, cache_len - 1))
+        write = jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0)))
+        ck = write(cache["k"], kd, slot)
+        cv = write(cache["v"], vd, slot)
+    if DECODE_KERNEL and window is None:
+        from ..kernels.flash_decode import flash_decode
+        out = flash_decode(q[:, 0], ck, cv, pos)[:, None]
+    else:
+        out = cache_attention(q, ck, cv, pos, window=window)
     out = matmul(out.reshape(B, 1, num_heads * head_dim), p["wo"])
     return out, {"k": ck, "v": cv}
 
@@ -204,9 +263,13 @@ def cache_attention(q: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
                     pos: jnp.ndarray, window: Optional[int] = None) -> jnp.ndarray:
     """q: (B, 1, Hq, hd) vs cache (B, L, Hkv, hd) → (B, 1, Hq, hd).
 
-    Validity: slot i holds absolute position i (no window) or is valid
-    iff the ring buffer has written it within the last ``window`` steps.
-    This is the pure-jnp oracle of the Pallas ``flash_decode`` kernel.
+    ``pos`` is a scalar or per-slot (B,) vector.  Validity: slot i
+    holds absolute position i (no window) or is valid iff the ring
+    buffer has written it within the last ``window`` steps; rows with
+    pos < 0 are empty serving slots and return exactly zero (softmax
+    multiplied by the row's validity — matching the kernel's masked
+    online softmax).  This is the pure-jnp oracle of the Pallas
+    ``flash_decode`` kernel.
 
     With ``layers.F32_DOT_OUTPUT`` (baseline) the cache is upcast to f32
     before the contractions — faithful to naive serving code, but it
@@ -226,20 +289,60 @@ def cache_attention(q: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
         s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(ck.dtype), ck,
                        preferred_element_type=jnp.float32)
     s = s * (hd ** -0.5)
+    pos_vec = _positions_vector(pos, B)
     idx = jnp.arange(L, dtype=jnp.int32)
     if window is None:
-        valid = idx <= pos
+        valid = idx[None, :] <= pos_vec[:, None]                     # (B, L)
     else:
-        # ring buffer: all slots valid once pos+1 >= L; before that, slots <= pos
-        valid = jnp.where(pos + 1 >= L, jnp.ones((L,), bool), idx <= pos)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+        # ring buffer: all slots valid once pos+1 >= L; before that,
+        # slots <= pos (empty rows pos < 0 stay all-invalid)
+        valid = ((idx[None, :] <= pos_vec[:, None])
+                 | (pos_vec[:, None] + 1 >= L))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1) * valid[:, None, None, :]
     if F32_DOT_OUTPUT:
         out = jnp.einsum("bhgk,bkhd->bhgd", p, cv.astype(jnp.float32))
     else:
         out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cv.dtype), cv,
                          preferred_element_type=jnp.float32)
     return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+def gqa_prefill(p: dict, x: jnp.ndarray, cache: dict, *, num_heads: int,
+                num_kv_heads: int, head_dim: int, rope_theta: float,
+                rms_eps: float = 1e-5,
+                window: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
+    """Whole-prompt prefill: one batched pass over x (B, P, D) that
+    writes every position's K/V into the cache and attends causally
+    within the prompt — replacing P single-token ``gqa_decode``
+    dispatches.  Fresh-cache semantics (positions 0..P-1).  With a
+    sliding window whose ring is shorter than P, only the last
+    ``cache_len`` positions are written, laid out at their ring slots
+    (pos % cache_len) so subsequent ``gqa_decode`` steps continue the
+    ring seamlessly.  Returns (attn_out (B,P,D), new_cache)."""
+    B, P, _ = x.shape
+    cache_len = cache["k"].shape[1]
+    if window is None and P > cache_len:
+        raise ValueError(
+            f"prompt length {P} overflows the {cache_len}-slot prefix KV "
+            f"cache")
+    positions = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None, :],
+                                 (B, P))
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
+                           positions, rope_theta, rms_eps)
+    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if P > cache_len:
+        # ring layout of the last cache_len positions: slot s holds the
+        # unique position in [P - cache_len, P) with pos % cache_len == s
+        order = np.argsort(np.arange(P - cache_len, P) % cache_len)
+        ck = kd[:, P - cache_len:][:, order]
+        cv = vd[:, P - cache_len:][:, order]
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, 0, 0, 0))
+    out = blockwise_attention(q, k, v, window=window, causal=True)
+    out = matmul(out.reshape(B, P, num_heads * head_dim), p["wo"])
+    return out, {"k": ck, "v": cv}
 
 
 # --------------------------------------------------------------------------

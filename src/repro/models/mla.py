@@ -16,7 +16,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import NEG_INF, blockwise_attention
+from .attention import (NEG_INF, _check_cache_overflow, _positions_vector,
+                        blockwise_attention)
 from .config import MLAConfig
 from .layers import apply_rope, dense_init, matmul, rmsnorm, rmsnorm_init
 
@@ -101,18 +102,36 @@ def mla_decode(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray, *,
                num_heads: int, m: MLAConfig, rope_theta: float,
                rms_eps: float = 1e-5,
                window: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
-    """One-token absorbed-form MLA decode.  x: (B, 1, D)."""
+    """One-token absorbed-form MLA decode.  x: (B, 1, D).
+
+    ``pos`` is a scalar or per-slot (B,) vector with the same contract
+    as :func:`repro.models.attention.gqa_decode`: rows with pos < 0 are
+    empty serving slots and return exactly zero; without a window a
+    concrete pos >= cache_len raises instead of silently overwriting
+    the last latent slot."""
     B = x.shape[0]
     cache_len = cache["c_kv"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    if window is None:
+        _check_cache_overflow(pos, cache_len)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_vec = _positions_vector(pos, B)
+    positions = pos_vec[:, None]
     q_nope, q_rope = _queries(p, x, num_heads, m, positions, rope_theta, rms_eps)
     c_kv, k_rope = _latents(p, x, m, positions, rope_theta, rms_eps)
 
-    slot = pos % cache_len if window is not None else pos
-    cc = jax.lax.dynamic_update_slice(
-        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, slot, 0))
-    cr = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+    cd = c_kv.astype(cache["c_kv"].dtype)
+    rd = k_rope.astype(cache["k_rope"].dtype)
+    if pos.ndim == 0:
+        slot = pos % cache_len if window is not None else pos
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], cd, (0, slot, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], rd, (0, slot, 0))
+    else:
+        slot = (pos_vec % cache_len if window is not None
+                else jnp.clip(pos_vec, 0, cache_len - 1))
+        write = jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0)))
+        cc = write(cache["c_kv"], cd, slot)
+        cr = write(cache["k_rope"], rd, slot)
 
     # absorb W_uk into the query: q_lat[b,h,r] = Σ_d q_nope[b,h,d]·W_uk[r,h,d]
     w_kv = p["wkv_b"].reshape(m.kv_lora_rank, num_heads,
@@ -127,13 +146,46 @@ def mla_decode(p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray, *,
     s *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     idx = jnp.arange(cache_len, dtype=jnp.int32)
     if window is None:
-        valid = idx <= pos
+        valid = idx[None, :] <= pos_vec[:, None]                    # (B, L)
     else:
-        valid = jnp.where(pos + 1 >= cache_len, jnp.ones((cache_len,), bool),
-                          idx <= pos)
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
-    w = jax.nn.softmax(s, axis=-1)
+        valid = ((idx[None, :] <= pos_vec[:, None])
+                 | (pos_vec[:, None] + 1 >= cache_len))
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    # empty slots (pos < 0, all-invalid rows) come back exactly zero
+    w = jax.nn.softmax(s, axis=-1) * valid[:, None, :]
     ctx_lat = jnp.einsum("bhl,blr->bhr", w, cc.astype(jnp.float32))
     out = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
     out = out.reshape(B, 1, num_heads * m.v_head_dim).astype(x.dtype)
     return matmul(out, p["wo"]), {"c_kv": cc, "k_rope": cr}
+
+
+def mla_prefill(p: dict, x: jnp.ndarray, cache: dict, *, num_heads: int,
+                m: MLAConfig, rope_theta: float, rms_eps: float = 1e-5,
+                window: Optional[int] = None) -> Tuple[jnp.ndarray, dict]:
+    """Whole-prompt MLA prefill: expanded-form attention over x (B, P, D)
+    plus one batched write of the prompt's latents into the decode cache
+    — replacing P single-token ``mla_decode`` dispatches.  Fresh-cache
+    semantics (positions 0..P-1); with a ring shorter than P only the
+    last ``cache_len`` latents are written at their ring slots.
+    Returns (attn_out (B,P,D), new_cache)."""
+    import numpy as np
+    B, P, _ = x.shape
+    cache_len = cache["c_kv"].shape[1]
+    if window is None and P > cache_len:
+        raise ValueError(
+            f"prompt length {P} overflows the {cache_len}-slot latent cache")
+    positions = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None, :],
+                                 (B, P))
+    c_kv, k_rope = _latents(p, x, m, positions, rope_theta, rms_eps)
+    cd = c_kv.astype(cache["c_kv"].dtype)
+    rd = k_rope.astype(cache["k_rope"].dtype)
+    if P > cache_len:
+        order = np.argsort(np.arange(P - cache_len, P) % cache_len)
+        cc = cd[:, P - cache_len:][:, order]
+        cr = rd[:, P - cache_len:][:, order]
+    else:
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], cd, (0, 0, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], rd, (0, 0, 0))
+    out = mla_apply(p, x, num_heads=num_heads, m=m, rope_theta=rope_theta,
+                    rms_eps=rms_eps, window=window, positions=positions)
+    return out, {"c_kv": cc, "k_rope": cr}

@@ -14,7 +14,15 @@ API
 * ``forward(cfg, params, tokens, enc_embeds=None)`` → (logits f32, aux)
 * ``train_loss(cfg, params, batch)`` → scalar (+ MoE aux, + MTP term)
 * ``init_cache(cfg, params, batch, cache_len, dtype, enc_embeds=None)``
+* ``prefill(cfg, params, cache, tokens, lengths=None)`` → (last-token
+  logits, cache primed with the whole prompt in one batched pass)
 * ``decode_step(cfg, params, cache, token, pos)`` → (logits, new cache)
+
+Serving contract: ``cache["pos"]`` is a scalar for the legacy
+whole-batch decode loop, or a per-slot (B,) vector for the continuous
+batching serving plane (:mod:`repro.runtime.serving`) — each batch row
+sits at its own depth and rows with pos < 0 are empty slots whose
+attention output is exactly zero and whose position does not advance.
 """
 
 from __future__ import annotations
@@ -209,6 +217,49 @@ def _apply_sublayer_decode(p: dict, c: dict, cfg: ArchConfig, kind: LayerKind,
         new_c["mla"] = mc
     else:
         h, sc = ssm_mod.mamba_decode(p["mamba"], h, c["ssm"], cfg.ssm, cfg.rms_eps)
+        new_c["ssm"] = sc
+    x = x + h
+    if cross and mixer != "mamba" and "mem_k" in c:
+        h = rmsnorm(p["norm_c"], x, cfg.rms_eps)
+        h = attn.cross_apply(p["cross"], h, (c["mem_k"], c["mem_v"]),
+                             num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads, head_dim=hd)
+        x = x + h
+    if ffn is not None:
+        h = rmsnorm(p["norm2"], x, cfg.rms_eps)
+        if ffn == "dense":
+            h = mlp_apply(p["mlp"], h)
+        else:
+            h, _ = moe_mod.moe_apply(p["moe"], h, cfg.moe)
+        x = x + h
+    return x, new_c
+
+
+def _apply_sublayer_prefill(p: dict, c: dict, cfg: ArchConfig,
+                            kind: LayerKind, x: jnp.ndarray):
+    """Whole-prompt counterpart of ``_apply_sublayer_decode``: one
+    batched pass over x (B, P, D) that also primes the sublayer cache."""
+    mixer, ffn, cross = kind
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window
+    h = rmsnorm(p["norm1"], x, cfg.rms_eps)
+    new_c = dict(c)
+    if mixer == "attn":
+        h, kv = attn.gqa_prefill(p["attn"], h, c["kv"],
+                                 num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+                                 rope_theta=cfg.rope_theta,
+                                 rms_eps=cfg.rms_eps, window=window)
+        new_c["kv"] = kv
+    elif mixer == "mla":
+        h, mc = mla_mod.mla_prefill(p["mla"], h, c["mla"],
+                                    num_heads=cfg.num_heads, m=cfg.mla,
+                                    rope_theta=cfg.rope_theta,
+                                    rms_eps=cfg.rms_eps, window=window)
+        new_c["mla"] = mc
+    else:
+        h, sc = ssm_mod.mamba_prefill(p["mamba"], h, c["ssm"], cfg.ssm,
+                                      cfg.rms_eps)
         new_c["ssm"] = sc
     x = x + h
     if cross and mixer != "mamba" and "mem_k" in c:
@@ -432,14 +483,19 @@ def _mtp_loss(cfg: ArchConfig, params: dict, hidden: jnp.ndarray,
 
 def init_cache(cfg: ArchConfig, params: dict, batch: int, cache_len: int,
                dtype=jnp.float32,
-               enc_embeds: Optional[jnp.ndarray] = None) -> dict:
+               enc_embeds: Optional[jnp.ndarray] = None,
+               per_slot_pos: bool = False) -> dict:
     """Build the per-layer decode cache pytree (stacked per segment).
 
-    For enc-dec models the encoder runs once here and each decoder
-    layer's cross K/V memory is precomputed into the cache.
+    With ``per_slot_pos`` the cache carries a (batch,) position vector
+    initialized to -1 (every slot empty) — the serving-plane layout
+    where each row is an independent request slot.  For enc-dec models
+    the encoder runs once here and each decoder layer's cross K/V
+    memory is precomputed into the cache.
     """
     segs = find_segments(layer_plan(cfg))
-    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    cache: dict = {"pos": (jnp.full((batch,), -1, jnp.int32) if per_slot_pos
+                           else jnp.zeros((), jnp.int32))}
     enc_out = None
     if cfg.enc_dec:
         assert enc_embeds is not None
@@ -466,14 +522,89 @@ def init_cache(cfg: ArchConfig, params: dict, batch: int, cache_len: int,
     return cache
 
 
+def prefill(cfg: ArchConfig, params: dict, cache: dict,
+            tokens: jnp.ndarray,
+            lengths: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, dict]:
+    """Batched whole-prompt prefill: one forward pass over tokens
+    (B, P) that primes every layer's cache for positions 0..P-1 —
+    replacing the O(prompt_len)-dispatch teacher-forced ``decode_step``
+    loop.  Returns (logits (B, V) f32 at each row's **last prompt
+    token**, new cache positioned for the first generated token).
+
+    ``lengths`` (B,) enables ragged prompts padded to P: row b's real
+    prompt is tokens[b, :lengths[b]]; the causal mask keeps padding out
+    of real queries' attention, the cache slots past lengths[b] hold
+    inert garbage masked by the per-slot pos validity, and the returned
+    logits are taken at position lengths[b]-1.  Ragged prompts require
+    per-slot positions and are rejected for SSM/hybrid stacks (the
+    recurrent state would absorb the padding) and for prompts longer
+    than a sliding-window ring (the ring reorder is batch-uniform).
+
+    Exactness: prefill ≡ P stepped ``decode_step`` calls up to float
+    error, except through capacity-limited MoE layers — prefill routes
+    all B·P prompt tokens against the expert capacity at once while the
+    stepped path routes one token per row at a time, so *which* tokens
+    a saturated expert drops can differ (inherent to capacity routing,
+    not a cache defect: the mixer caches themselves stay step-exact).
+    """
+    segs = find_segments(layer_plan(cfg))
+    B, P = tokens.shape
+    kinds = layer_plan(cfg)
+    per_slot = jnp.ndim(cache["pos"]) == 1
+    if lengths is not None:
+        if not per_slot:
+            raise ValueError("ragged prefill needs a per-slot pos cache "
+                             "(init_cache(..., per_slot_pos=True))")
+        if any(k[0] == "mamba" for k in kinds):
+            raise ValueError("ragged prefill is not supported for SSM/hybrid "
+                             "stacks: the recurrent state would absorb the "
+                             "padding tokens")
+        ring = min(P, cfg.sliding_window) if cfg.sliding_window else P
+        if cfg.sliding_window and P > ring:
+            raise ValueError("ragged prefill cannot exceed the sliding-window "
+                             "ring; trim prompts to the window")
+    x = embed_apply(params["embed"], tokens)
+    new_cache: dict = {}
+    for si, (pattern, repeats) in enumerate(segs):
+        def body(h, slices):
+            p_slice, c_slice = slices
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                h, nc = _apply_sublayer_prefill(p_slice[f"sub{i}"],
+                                                c_slice[f"sub{i}"], cfg, kind, h)
+                new_c[f"sub{i}"] = nc
+            return h, new_c
+        x, seg_cache = scan(body, x, (params[f"seg{si}"], cache[f"seg{si}"]))
+        new_cache[f"seg{si}"] = seg_cache
+    h = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad(unembed_apply(table, h), cfg)          # (B, P, V)
+    if lengths is None:
+        last = logits[:, -1]
+        new_cache["pos"] = (jnp.full((B,), P, jnp.int32) if per_slot
+                            else jnp.asarray(P, jnp.int32))
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        new_cache["pos"] = lengths
+    return last, new_cache
+
+
 def decode_step(cfg: ArchConfig, params: dict, cache: dict,
                 token: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
     """One decode step.  token: (B, 1) int32.  Returns (logits (B, V) f32,
-    updated cache with pos advanced)."""
+    updated cache with pos advanced).
+
+    ``cache["pos"]`` may be a scalar (whole batch in lockstep) or a
+    per-slot (B,) vector; vector rows with pos < 0 are empty serving
+    slots — their position does not advance and their logits are
+    garbage the caller must mask."""
     segs = find_segments(layer_plan(cfg))
     pos = cache["pos"]
     x = embed_apply(params["embed"], token)
-    new_cache: dict = {"pos": pos + 1}
+    new_pos = pos + 1 if jnp.ndim(pos) == 0 else jnp.where(pos >= 0, pos + 1, pos)
+    new_cache: dict = {"pos": new_pos}
     for si, (pattern, repeats) in enumerate(segs):
         def body(h, slices):
             p_slice, c_slice = slices

@@ -177,6 +177,40 @@ def init_ssm_cache(batch: int, d_model: int, s: SSMConfig,
     }
 
 
+def mamba_prefill(p: dict, xin: jnp.ndarray, cache: dict, s: SSMConfig,
+                  rms_eps: float = 1e-5) -> Tuple[jnp.ndarray, dict]:
+    """Whole-prompt Mamba2 prefill: one chunked-SSD pass over xin
+    (B, P, D) that also captures the recurrent state after the last
+    token and the conv tail (the last d_conv-1 *pre-activation* conv
+    channels) — the exact cache ``mamba_decode`` expects, replacing P
+    recurrent single-token dispatches.  Fresh-cache semantics (the
+    incoming cache must be zeros).  Returns (out (B,P,D), new_cache)."""
+    Bsz, S, D = xin.shape
+    di = s.d_inner(D)
+    nh = s.nheads(D)
+    proj = matmul(xin, p["in_proj"])
+    z, x, Bm, Cm, dt = _split_proj(proj, di, s.d_state, nh)
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)          # (B,S,ch)
+    xbc = causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = xbc[..., :di], xbc[..., di:di + s.d_state], xbc[..., di + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(Bsz, S, nh, s.headdim)
+    y, final = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    y = (y + p["D"][None, None, :, None] * xh).astype(xin.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), rms_eps)
+    # conv tail: last d_conv-1 raw (pre-silu) rows, zero-padded on the
+    # left exactly as the causal conv saw them
+    K = p["conv_w"].shape[0]
+    padded = jnp.concatenate(
+        [jnp.zeros((Bsz, K - 1, xbc_raw.shape[-1]), xbc_raw.dtype), xbc_raw],
+        axis=1)
+    new_cache = {"state": final, "conv": padded[:, -(K - 1):, :]
+                 .astype(cache["conv"].dtype)}
+    return matmul(y, p["out_proj"]), new_cache
+
+
 def mamba_decode(p: dict, xin: jnp.ndarray, cache: dict, s: SSMConfig,
                  rms_eps: float = 1e-5) -> Tuple[jnp.ndarray, dict]:
     """One-token recurrent step.  xin: (B, 1, D)."""

@@ -24,12 +24,14 @@ from . import loop, masked, slots
 from .loop import SlotStepRecord, SlotTrainLoop, TraceCount, counting_jit
 from .masked import (broadcast_mask, masked_local_step, masked_mean,
                      masked_where, pad_to_capacity, participation_mask)
+from .serving import Request, ServeLoop
 from .slots import RemapPlan, SlotCapacityError, SlotMap
 
 __all__ = [
-    "loop", "masked", "slots",
+    "loop", "masked", "serving", "slots",
     "SlotStepRecord", "SlotTrainLoop", "TraceCount", "counting_jit",
     "broadcast_mask", "masked_local_step", "masked_mean", "masked_where",
     "pad_to_capacity", "participation_mask",
+    "Request", "ServeLoop",
     "RemapPlan", "SlotCapacityError", "SlotMap",
 ]

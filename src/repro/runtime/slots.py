@@ -97,6 +97,11 @@ class SlotMap:
         """Live node ids in slot order."""
         return tuple(u for u in self._node_at if u is not None)
 
+    @property
+    def num_free(self) -> int:
+        """Free slots remaining (the serving plane's admission gate)."""
+        return len(self._free)
+
     def alive_mask(self) -> np.ndarray:
         """(capacity,) float32 0/1 mask — 1 where the slot hosts a live
         node.  This is the on-device mask the masked local step and

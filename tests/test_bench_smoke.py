@@ -236,3 +236,27 @@ def test_benchmarks_quick_cohort_stream_json():
     assert all(r["streamed_in"] ==
                r["restored"] + r["donor_seeded"] + r["fresh"]
                for r in stream)
+
+
+def test_benchmarks_quick_serve_load_json():
+    """The ISSUE 9 acceptance pins through the --json path: per-slot-pos
+    flash_decode equals the cache_attention oracle within 1e-5, empty
+    slots return exactly zero, both admission policies replay the
+    Poisson trace with 0 decode retraces after warmup across >= 3
+    distinct batch occupancies, and continuous batching sustains at
+    least static-batch throughput."""
+    res = _run("--only", "serve_load", "--json")
+    assert res.returncode == 0, res.stderr[-2000:]
+    with open(os.path.join(REPO, "BENCH_serve_load.json")) as f:
+        data = json.load(f)
+    assert not data["failed"] and data["quick"]
+    rows = data["rows"]
+    parity = [r for r in rows if r["table"] == "serve_parity"]
+    assert parity and all(r["within_1e5"] == 1 for r in parity), parity
+    assert all(r["empty_slot_zero"] == 1 for r in parity)
+    load = {r["policy"]: r for r in rows if r["table"] == "serve_load"}
+    for policy in ("continuous", "static"):
+        assert load[policy]["retraces"] == 0, load
+        assert load[policy]["distinct_occupancies"] >= 3, load
+        assert load[policy]["p99_ms"] >= load[policy]["p50_ms"] > 0
+    assert load["continuous_vs_static"]["continuous_wins"] == 1, load
