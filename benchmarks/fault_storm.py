@@ -1,0 +1,195 @@
+"""Fault-storm benchmark: convergence under loss × partition × straggler.
+
+The robustness gate for :mod:`repro.faults`: the same consensus
+workload (identity local step, slot loop mixing over the live FedLay
+overlay) runs fault-free and under seeded :class:`~repro.faults.FaultPlan`
+storms, and we measure **rounds-to-target** — how many mixing rounds
+until the alive population's parameters agree within a tolerance.
+Degraded rounds renormalize away unreachable edges (stragglers, link
+outages, partitions), so the storm arms converge slower but must stay
+within ``ROUNDS_RATIO_BOUND ×`` the clean arm — the committed bound CI
+asserts on (``ratio_ok``).  A partitioned overlay cannot reach global
+consensus at all until it heals, which is exactly what the
+partition arm's window exercises.
+
+Also measured: **repair latency** — simulated seconds from the
+partition-heal event until NDMP correctness returns to 1.0 (the chaos
+engine's rejoin sweep + Theorem-1 splices), and the loop's retrace
+count (fault storms are runtime-input-only: 0 retraces after the
+first trace).
+
+Axes swept: message-loss rate {0, 10%}, one 2-way partition-and-heal,
+2 stragglers.  ``--quick`` shrinks population and horizon for the CI
+smoke job.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ndmp import Simulator
+from repro.faults import ChaosEngine, FaultPlan, Partition, Straggler
+from repro.optim.optimizers import sgd
+from repro.overlay import OverlayController
+from repro.runtime import SlotTrainLoop, masked_local_step
+
+from .common import emit
+
+#: CI gate: storm arms must converge within this factor of the clean arm.
+ROUNDS_RATIO_BOUND = 3.0
+
+#: Consensus tolerance: max |w - mean(w)| over alive rows.
+TARGET_SPREAD = 1e-3
+
+
+def _make_sim(n: int, seed: int = 0) -> Simulator:
+    sim = Simulator(num_spaces=2, latency=0.05, heartbeat_period=0.5,
+                    probe_period=1.0, seed=seed)
+    sim.seed_network(list(range(n)))
+    return sim
+
+
+#: Fault windows in simulated seconds (= rounds at step_time 1.0) —
+#: they open at round 2, squarely inside the convergence window, so
+#: every storm arm actually converges *through* its faults.
+PARTITION_WINDOW = (2.0, 14.0)
+STRAGGLE_WINDOW = (2.0, 18.0)
+
+
+def _storm_plan(n: int, loss: float, partition: bool,
+                stragglers: int) -> FaultPlan:
+    """The seeded storm: ``loss`` NDMP message loss for the whole run,
+    one 2-way partition-and-heal, and ``stragglers`` slow nodes."""
+    parts = ()
+    if partition:
+        half = tuple(range(n // 2)), tuple(range(n // 2, n))
+        parts = (Partition(start=PARTITION_WINDOW[0],
+                           end=PARTITION_WINDOW[1], groups=half),)
+    slow = tuple(Straggler(start=STRAGGLE_WINDOW[0],
+                           end=STRAGGLE_WINDOW[1],
+                           node=n - 1 - i) for i in range(stragglers))
+    return FaultPlan(seed=7, msg_loss=loss, partitions=parts,
+                     stragglers=slow)
+
+
+def _consensus_loop(sim, capacity: int, dim: int) -> SlotTrainLoop:
+    """Identity local step: only mixing moves the parameters, so
+    rounds-to-consensus isolates the overlay's (possibly degraded)
+    mixing quality."""
+
+    def make_params(u):
+        w = np.random.default_rng(u).normal(size=dim).astype(np.float32)
+        return {"w": w}
+
+    def make_batch(node_ids, step):
+        return {"x": np.zeros((len(node_ids), 1), np.float32)}
+
+    def base_step(params, opt_state, batch):
+        import jax.numpy as jnp
+        loss = jnp.mean(params["w"] ** 2, axis=-1)
+        return params, opt_state, {"loss": loss}
+
+    return SlotTrainLoop(
+        OverlayController(sim, capacity=capacity),
+        local_step=masked_local_step(base_step),
+        make_params=make_params, optimizer=sgd(0.0),
+        make_batch=make_batch, step_time=1.0)
+
+
+def _rounds_to_consensus(loop: SlotTrainLoop, max_rounds: int,
+                         target: float = TARGET_SPREAD):
+    """(rounds, reached): rounds of run(1) until every alive row is
+    within ``target`` of the alive mean."""
+    ctl = loop.controller
+    for r in range(max_rounds):
+        loop.run(1)
+        slots = [ctl.slots.slot_of[u] for u in ctl.alive]
+        rows = np.asarray(loop.params["w"])[slots]
+        spread = float(np.abs(rows - rows.mean(axis=0)).max())
+        if spread < target:
+            return r + 1, True
+    return max_rounds, False
+
+
+def _repair_latency(n: int, plan: FaultPlan, heal_t: float,
+                    timeout: float = 120.0) -> float:
+    """Simulated seconds from the partition heal until NDMP correctness
+    returns to 1.0 on the object engine (the rejoin-sweep repair
+    latency the paper's 3T detection + Theorem-1 splicing predicts is
+    short)."""
+    sim = ChaosEngine(_make_sim(n, seed=1), plan)
+    sim.run_until(heal_t)
+    t = heal_t
+    while sim.correctness() < 1.0 and t - heal_t < timeout:
+        t += 0.5
+        sim.run_until(t)
+    return t - heal_t
+
+
+def run(quick: bool = False) -> None:
+    n = 8 if quick else 16
+    capacity = 8 if quick else 16
+    dim = 64 if quick else 512
+    max_rounds = 120 if quick else 400
+
+    # --- clean arm: the baseline rounds-to-target ------------------------
+    clean = _consensus_loop(_make_sim(n), capacity, dim)
+    clean_rounds, clean_ok = _rounds_to_consensus(clean, max_rounds)
+    emit("fault_storm", arm="clean", loss_rate=0.0, partition=0,
+         stragglers=0, n=n, rounds_to_target=clean_rounds,
+         reached=int(clean_ok), retraces=clean.trace_count.retraces,
+         rounds_ratio=1.0, ratio_ok=1)
+
+    # --- storm arms ------------------------------------------------------
+    # The ratio gate only makes sense for faults that *don't* freeze
+    # part of the population: a straggler's (or partitioned node's)
+    # parameters cannot move while its window is open, so those arms
+    # are gated on recovery — consensus within ``bound × clean`` rounds
+    # of the fault window closing — instead of on the raw ratio.
+    arms = [
+        ("loss", 0.10, False, 0, 0.0),
+        ("loss+straggle", 0.10, False, 2, STRAGGLE_WINDOW[1]),
+        ("loss+partition+straggle", 0.10, True, 2,
+         max(STRAGGLE_WINDOW[1], PARTITION_WINDOW[1])),
+    ]
+    all_ok = bool(clean_ok)
+    worst_ratio = 1.0
+    for name, loss, part, slow, fault_end in arms:
+        plan = _storm_plan(n, loss, part, slow)
+        sim = ChaosEngine(_make_sim(n), plan)
+        loop = _consensus_loop(sim, capacity, dim)
+        rounds, ok = _rounds_to_consensus(loop, max_rounds)
+        budget = ROUNDS_RATIO_BOUND * clean_rounds
+        if fault_end:  # recovery gate: rounds past the window closing
+            recovery = rounds - fault_end
+            arm_ok = ok and recovery <= budget
+            extra = {"fault_end_round": int(fault_end),
+                     "recovery_rounds": round(recovery, 1)}
+        else:  # pure message loss: straight ratio gate vs clean
+            ratio = rounds / max(clean_rounds, 1)
+            worst_ratio = max(worst_ratio, ratio)
+            arm_ok = ok and ratio <= ROUNDS_RATIO_BOUND
+            extra = {"rounds_ratio": round(ratio, 2)}
+        all_ok = all_ok and arm_ok
+        emit("fault_storm", arm=name, loss_rate=loss, partition=int(part),
+             stragglers=slow, n=n, rounds_to_target=rounds,
+             reached=int(ok), retraces=loop.trace_count.retraces,
+             faults_injected=sum(sim.counts.values()),
+             ratio_ok=int(arm_ok), **extra)
+
+    # --- repair latency after partition heal -----------------------------
+    plan = _storm_plan(n, 0.10, True, 0)
+    latency = _repair_latency(n, plan, heal_t=PARTITION_WINDOW[1])
+    repair_ok = latency < 60.0
+    emit("fault_storm_repair", n=n, loss_rate=0.10,
+         repair_latency_s=round(latency, 2), repair_ok=int(repair_ok))
+
+    emit("fault_storm_gate", n=n, worst_rounds_ratio=round(worst_ratio, 2),
+         bound=ROUNDS_RATIO_BOUND,
+         gate_ok=int(all_ok and repair_ok
+                     and worst_ratio <= ROUNDS_RATIO_BOUND))
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -35,11 +35,12 @@ from typing import Dict, List, Optional, Tuple
 
 from repro import obs
 
-from . import (churn_swap, cohort_stream, common, crosspod, fig3_topology,
-               fig8_churn, fig11_noniid, fig12_async, fig13_locality,
-               fig15_compute_cost, fig16_confidence, fig18_churn_accuracy,
-               fig20_scalability, mix_fusion, roofline, serve_load,
-               slot_runtime, sync_collectives, table3_accuracy)
+from . import (churn_swap, cohort_stream, common, crosspod, fault_storm,
+               fig3_topology, fig8_churn, fig11_noniid, fig12_async,
+               fig13_locality, fig15_compute_cost, fig16_confidence,
+               fig18_churn_accuracy, fig20_scalability, mix_fusion,
+               roofline, serve_load, slot_runtime, sync_collectives,
+               table3_accuracy)
 
 MODULES = {
     "fig3": fig3_topology,
@@ -60,6 +61,7 @@ MODULES = {
     "mix_fusion": mix_fusion,
     "cohort_stream": cohort_stream,
     "serve_load": serve_load,
+    "fault_storm": fault_storm,
 }
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -159,20 +161,35 @@ def compare_rows(baseline_rows: List[Dict], new_rows: List[Dict],
     return out
 
 
+def _baseline_warn(name: str, reason: str) -> None:
+    print(f"# WARNING baseline {name}: {reason}; skipping comparison",
+          file=sys.stderr, flush=True)
+
+
 def _load_baseline(name: str, quick: bool) -> Optional[List[Dict]]:
     """The committed (git HEAD) BENCH_<name>.json rows, falling back to
     the artifact currently on disk (e.g. a CI-downloaded baseline) when
     the file is not tracked; None unless comparable (same mode, not a
-    failed run)."""
+    failed run).
+
+    A missing artifact is a clean None (there is simply no baseline
+    yet); an *unreadable or malformed* one — truncated JSON, a non-dict
+    document, rows that aren't objects — warns and returns None so one
+    bad artifact degrades to "no comparison" instead of crashing the
+    whole ``--baseline`` gate."""
     data = None
     try:
         out = subprocess.run(
             ["git", "show", f"HEAD:BENCH_{name}.json"], cwd=REPO_ROOT,
             capture_output=True, text=True, timeout=10)
-        if out.returncode == 0:
-            data = json.loads(out.stdout)
     except Exception:
-        data = None
+        out = None
+    if out is not None and out.returncode == 0:
+        try:
+            data = json.loads(out.stdout)
+        except ValueError:
+            _baseline_warn(name, "committed artifact is not valid JSON")
+            return None
     if data is None:
         path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
         if not os.path.exists(path):
@@ -180,11 +197,24 @@ def _load_baseline(name: str, quick: bool) -> Optional[List[Dict]]:
         try:
             with open(path) as f:
                 data = json.load(f)
-        except (OSError, ValueError):
+        except (OSError, ValueError) as exc:
+            _baseline_warn(name, f"unreadable artifact on disk ({exc})")
             return None
+    if not isinstance(data, dict):
+        _baseline_warn(
+            name, f"malformed artifact (expected a JSON object, "
+            f"got {type(data).__name__})")
+        return None
     if data.get("failed") or data.get("quick") != quick:
         return None
-    return data.get("rows") or None
+    rows = data.get("rows")
+    if rows is None:
+        return None
+    if (not isinstance(rows, list)
+            or not all(isinstance(r, dict) for r in rows)):
+        _baseline_warn(name, "malformed rows (expected a list of objects)")
+        return None
+    return rows or None
 
 
 def main() -> int:

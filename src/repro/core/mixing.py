@@ -517,18 +517,30 @@ def grouped_mix_reference(sched: PermuteSchedule, X: np.ndarray,
 
 
 def masked_mixing_matrix(sched: PermuteSchedule,
-                         mask: Sequence[float]) -> np.ndarray:
+                         mask: Sequence[float],
+                         edge_mask: Optional[np.ndarray] = None) -> np.ndarray:
     """Dense equivalent of mask-aware mixing (the test oracle for
     :func:`repro.dist.sync.global_mixer` with ``masked=True``).
 
     Row ``i`` with ``mask[i] == 0`` is the identity (a dead or skipping
     client keeps its own model and contributes to nobody).  Live rows
     drop masked-out sources and renormalize over the surviving weights,
-    so the matrix stays row-stochastic for any 0/1 mask."""
+    so the matrix stays row-stochastic for any 0/1 mask.
+
+    ``edge_mask`` (optional, (n, 2L) 0/1) additionally drops the edge
+    from row ``i``'s k-th source before renormalizing — the degraded
+    -round oracle for :mod:`repro.faults` link outages/stragglers.  A
+    live row with every edge down degenerates to the identity (it
+    keeps its own model: total = self_weight > 0)."""
     m = np.asarray(mask, dtype=np.float64)
     n = sched.num_clients
     if m.shape != (n,):
         raise ValueError(f"mask shape {m.shape} != ({n},)")
+    if edge_mask is not None:
+        edge_mask = np.asarray(edge_mask, dtype=np.float64)
+        if edge_mask.shape != (n, sched.num_slots):
+            raise ValueError(
+                f"edge_mask shape {edge_mask.shape} != ({n}, {sched.num_slots})")
     W = np.zeros((n, n), dtype=np.float64)
     for i in range(n):
         if m[i] == 0.0:
@@ -537,6 +549,8 @@ def masked_mixing_matrix(sched: PermuteSchedule,
         eff = np.asarray(
             [float(sched.weights[i, k]) * m[sched.perms[k][i]]
              for k in range(sched.num_slots)])
+        if edge_mask is not None:
+            eff = eff * edge_mask[i]
         total = float(sched.self_weight[i]) + eff.sum()
         if total <= 0.0:
             W[i, i] = 1.0

@@ -289,6 +289,9 @@ class Simulator:
         self.nodes: Dict[int, NodeState] = {}
         self.dropped_messages = 0
         self.delivered_messages = 0
+        # optional per-message fault seam (repro.faults): consulted on
+        # every send; None = the fault-free transport
+        self._msg_filter: Optional[Callable] = None
         # monotone count of membership operations (join/leave/fail) —
         # folded into tables_version so a fail→rejoin of the same node
         # inside one control window can never alias an unchanged stamp
@@ -303,13 +306,39 @@ class Simulator:
     def _schedule(self, when: float, item: Tuple) -> None:
         heapq.heappush(self._heap, (when, next(self._seq), item))
 
+    def set_message_filter(self, fn: Optional[Callable]) -> None:
+        """Install a transport fault seam (or ``None`` to remove it).
+
+        ``fn(now, src, dst, msg)`` is consulted on every :meth:`send` and
+        returns ``None`` for normal delivery or a ``(deliver, extra_delay,
+        duplicates)`` verdict: ``deliver=False`` drops the message (the
+        sender still counts it as sent — it went onto the wire),
+        ``extra_delay`` adds seconds of transit time, and ``duplicates``
+        schedules that many extra copies (at-least-once transports).
+        This is the control-plane fault-injection seam of
+        :class:`repro.faults.plan.ChaosEngine`; NDMP's handlers are
+        already idempotent under loss/duplication (monotone
+        ``improve_pointer``, retried discoveries, periodic probes)."""
+        self._msg_filter = fn
+
     def send(self, src: int, dst: int, msg: Message, *, join_phase: bool = False) -> None:
         node = self.nodes.get(src)
         if node is not None:
             node.sent_messages += 1
             if join_phase:
                 node.join_messages += 1
-        self._schedule(self.now + self.latency(), ("msg", src, dst, msg))
+        delay = self.latency()
+        if self._msg_filter is not None:
+            verdict = self._msg_filter(self.now, src, dst, msg)
+            if verdict is not None:
+                deliver, extra_delay, duplicates = verdict
+                if not deliver:
+                    self.dropped_messages += 1
+                    return
+                delay += extra_delay
+                for _ in range(duplicates):
+                    self._schedule(self.now + delay, ("msg", src, dst, msg))
+        self._schedule(self.now + delay, ("msg", src, dst, msg))
 
     def run_until(self, t: float) -> None:
         while self._heap and self._heap[0][0] <= t:
@@ -418,6 +447,30 @@ class Simulator:
                 msg = Discovery(space=s, target=st.coords[s], joiner=st.node_id,
                                 joiner_coords=st.coords)
                 self.send(st.node_id, entry, msg, join_phase=True)
+
+    def rejoin(self, node_id: int, bootstrap: int) -> None:
+        """Re-anchor an *already-alive* node through ``bootstrap``:
+        re-issue Neighbor_discovery in every space as if joining afresh,
+        keeping the current tables (the monotone ``improve_pointer`` rule
+        only ever adopts strictly closer peers).
+
+        This is the partition heal-merge mechanism: after an asymmetric
+        or full partition, each side's failure detection prunes the other
+        side out of every addr book, leaving two internally-correct but
+        disjoint overlays that no amount of probing can reconnect (probes
+        route through addr books).  Re-joining the nodes of one side
+        through any live contact on the other re-establishes cross-side
+        reachability; Theorem 1 splices each rejoiner at its globally
+        closest coordinate and the periodic bidirectional probes converge
+        the merged rings from there."""
+        st = self.nodes[node_id]
+        if not st.alive:
+            raise KeyError(f"node {node_id} is not alive; use join()")
+        self.churn_ops += 1
+        st.bootstrap = bootstrap
+        self._send_discoveries(st, all_spaces=True)
+        self._schedule(self.now + self.probe_period,
+                       ("timer", node_id, "join_retry"))
 
     def leave(self, node_id: int) -> None:
         """NDMP leave: notify ring-adjacent pairs, then depart."""

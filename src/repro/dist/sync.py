@@ -421,6 +421,11 @@ def global_mixer(strategy: str,
     :func:`repro.core.mixing.masked_mixing_matrix`.  This is the seam
     the fixed-capacity slot runtime (dead slots) and multirate
     participation (slow clients skipping a collective) both plug into.
+    Masked fedlay/ring mixers additionally accept a keyword-only
+    ``edge_mask`` — a (C, 2L) 0/1 runtime input that drops individual
+    unreachable edges before renormalizing (degraded rounds under
+    :mod:`repro.faults`); like ``mask`` it is a runtime value, so fault
+    storms never retrace.
 
     ``fuse="flat"`` (fedlay/ring) replaces the per-leaf permutation
     gathers with **one Pallas kernel per round** over the raveled
@@ -466,7 +471,7 @@ def global_mixer(strategy: str,
         raise ValueError("clients_per_device must be >= 1")
     if strategy == "none":
         if masked:
-            return lambda params, mask: params
+            return lambda params, mask, *, edge_mask=None: params
         return lambda params: params
 
     if strategy == "allreduce":
@@ -477,7 +482,10 @@ def global_mixer(strategy: str,
                              keepdims=True).astype(l.dtype), l.shape),
                 params)
 
-        def allreduce_masked(params, mask):
+        def allreduce_masked(params, mask, *, edge_mask=None):
+            # allreduce has no per-edge structure; a degraded node is a
+            # node-level fault (fold it into ``mask``), so edge_mask is
+            # accepted for signature parity and ignored
             m = mask.astype(jnp.float32)
             denom = jnp.maximum(jnp.sum(m), 1.0)
 
@@ -499,14 +507,24 @@ def global_mixer(strategy: str,
         weights = jnp.asarray(sched.weights)                    # (C, 2L)
         self_w = jnp.asarray(sched.self_weight)                 # (C,)
 
-        def masked_tables(mask):
+        def masked_tables(mask, edge_mask=None):
             """(sw (C,), ew (C, 2L), ok (C,)) of mask-renormalized
             weights — shared by the tree-walk and fused masked
-            variants so their semantics cannot drift apart."""
+            variants so their semantics cannot drift apart.
+
+            ``edge_mask`` is an optional (C, 2L) 0/1 runtime input
+            (degraded rounds, :mod:`repro.faults`): entry [i, k] = 0
+            drops the edge from slot i's k-th source *before*
+            renormalizing, so unreachable neighbors are renormalized
+            away exactly like dead ones.  A fully isolated live row
+            (all edges down) degenerates to total = self_w > 0 and
+            keeps its own model."""
             m = mask.astype(jnp.float32)
             # source contributions gated by the source's mask, rows
             # renormalized over what survives
             eff = weights * jnp.take(m, perms, axis=0).T
+            if edge_mask is not None:
+                eff = eff * edge_mask.astype(jnp.float32)
             total = self_w + eff.sum(axis=1)
             ok = (m > 0) & (total > 0)
             safe = jnp.where(total > 0, total, 1.0)
@@ -554,16 +572,16 @@ def global_mixer(strategy: str,
             def mix_buf(buf):
                 return round_flat(buf, base_table)[0]
 
-            def mix_buf_masked(buf, mask):
-                sw, ew, ok = masked_tables(mask)
+            def mix_buf_masked(buf, mask, *, edge_mask=None):
+                sw, ew, ok = masked_tables(mask, edge_mask)
                 table = jnp.concatenate([sw[:, None], ew], axis=1)
                 return round_flat(buf, table, ok=ok)[0]
 
             def mix_buf_ef(buf, residual):
                 return round_flat(buf, base_table, residual=residual)
 
-            def mix_buf_masked_ef(buf, mask, residual):
-                sw, ew, ok = masked_tables(mask)
+            def mix_buf_masked_ef(buf, mask, residual, *, edge_mask=None):
+                sw, ew, ok = masked_tables(mask, edge_mask)
                 table = jnp.concatenate([sw[:, None], ew], axis=1)
                 out, res = round_flat(buf, table, ok=ok, residual=residual)
                 # masked-out rows (dead slots, multirate skips) keep
@@ -579,15 +597,15 @@ def global_mixer(strategy: str,
                 return inner
 
             if ef:
-                def mix_flat_ef(params, *rest):
+                def mix_flat_ef(params, *rest, **kw):
                     spec = FlatSpec.for_tree(params)
-                    out, res = inner(spec.ravel(params), *rest)
+                    out, res = inner(spec.ravel(params), *rest, **kw)
                     return spec.unravel(out), res
                 return mix_flat_ef
 
-            def mix_flat(params, *rest):
+            def mix_flat(params, *rest, **kw):
                 spec = FlatSpec.for_tree(params)
-                return spec.unravel(inner(spec.ravel(params), *rest))
+                return spec.unravel(inner(spec.ravel(params), *rest, **kw))
             return mix_flat
 
         def mix(params):
@@ -601,8 +619,8 @@ def global_mixer(strategy: str,
                 return acc
             return jax.tree.map(mix_leaf, params)
 
-        def mix_masked(params, mask):
-            sw, ew, ok = masked_tables(mask)
+        def mix_masked(params, mask, *, edge_mask=None):
+            sw, ew, ok = masked_tables(mask, edge_mask)
 
             def mix_leaf(leaf):
                 shape = (C,) + (1,) * (leaf.ndim - 1)

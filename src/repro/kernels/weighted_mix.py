@@ -261,6 +261,15 @@ def gather_mix(buf: jnp.ndarray, srcs, weights: jnp.ndarray,
     the default ``block_n=None`` budgets the compiled tile at ~2 MB
     (bn ≈ 2^19/C elements; shrink for larger C) and runs interpret
     mode as a single cell (no VMEM to fit).
+
+    Degraded-round contract (:mod:`repro.faults`): unreachable edges
+    never reach this kernel as structure — the masked mixers zero the
+    affected entries of the runtime ``weights`` table (after
+    renormalizing the survivors, see
+    ``repro.dist.sync.global_mixer``'s ``masked_tables``), so a link
+    outage, straggler, or partition round runs the *same* compiled
+    program with a different weight table: zero retraces, same
+    MixerCache entry.
     """
     interp = resolve_interpret(interpret)
     C, N = buf.shape

@@ -161,6 +161,44 @@ def run(args) -> Dict:
         args.sync, 4 * row_elems, n, num_spaces=args.spaces,
         clients_per_device=G) if codec_name is not None else wire)
 
+    # crash/resume: --ckpt-dir periodically checkpoints the full
+    # training state (params, optimizer state, EF residual) as a
+    # flattened leaf list (optimizer states are NamedTuples the ckpt
+    # treedef spec doesn't cover) and resumes from the newest
+    # checkpoint on startup.  Data streams are deterministic in
+    # (seed, client, step), so replaying from step k is exact.
+    manager = None
+    start_step = 0
+    if getattr(args, "ckpt_dir", None):
+        from ..ckpt.checkpoint import CheckpointManager
+        manager = CheckpointManager(args.ckpt_dir)
+
+        def _state():
+            state = {"params": params, "opt_state": opt_state}
+            if ef:
+                state["residual"] = residual
+            return state
+
+        if manager.latest() is not None:
+            tree, meta = manager.restore()
+            template = _state()
+            treedef = jax.tree.structure(template)
+            leaves = [jnp.asarray(l) for l in tree["leaves"]]
+            state = jax.tree.unflatten(treedef, leaves)
+            put = lambda t: jax.tree.map(
+                lambda x: jax.device_put(x, shard_c), t)
+            params, opt_state = put(state["params"]), put(state["opt_state"])
+            if ef:
+                residual = jax.device_put(
+                    state["residual"], NamedSharding(mesh, P("data", None)))
+            start_step = int(meta["step"])
+            # fast-forward the deterministic shards to the resume point
+            for s in streams:
+                for _ in range(start_step):
+                    next(s)
+            print(f"resumed from {args.ckpt_dir} at step {start_step}",
+                  flush=True)
+
     losses = []
     t0 = time.time()
     with contextlib.ExitStack() as stack_ctx:
@@ -169,7 +207,7 @@ def run(args) -> Dict:
             stack_ctx.enter_context(round_ledger(ledger))
         if getattr(args, "profile_dir", None):
             stack_ctx.enter_context(capture(args.profile_dir))
-        for step in range(args.steps):
+        for step in range(start_step, args.steps):
             xs, ys = zip(*(next(s) for s in streams))
             batch = {"tokens": jnp.asarray(np.stack(xs)),
                      "labels": jnp.asarray(np.stack(ys))}
@@ -188,12 +226,20 @@ def run(args) -> Dict:
                               loss=losses[-1],
                               wire_bytes_per_client=wire,
                               payload_bytes_per_client=payload)
+            if manager is not None and (
+                    (step + 1) % max(getattr(args, "ckpt_every", 0), 1) == 0
+                    or step == args.steps - 1):
+                leaves = [np.asarray(jax.device_get(l))
+                          for l in jax.tree.leaves(_state())]
+                manager.save(step + 1, {"leaves": leaves})
             if step % args.log_every == 0 or step == args.steps - 1:
                 print(f"step {step:5d}  loss {losses[-1]:.4f}  "
                       f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
     result = {"sync": args.sync, "clients": n, "clients_per_device": G,
               "steps": args.steps, "codec": codec_name,
-              "first_loss": losses[0], "final_loss": losses[-1],
+              "start_step": start_step,
+              "first_loss": losses[0] if losses else float("nan"),
+              "final_loss": losses[-1] if losses else float("nan"),
               "losses": losses}
     if ledger is not None:
         rows = ledger.to_jsonl(telemetry_out)
@@ -234,6 +280,12 @@ def main() -> int:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="crash/resume: checkpoint the training state "
+                         "into DIR every --ckpt-every steps and resume "
+                         "from the newest checkpoint on startup")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="steps between checkpoints (with --ckpt-dir)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--telemetry-out", default=None, metavar="PATH",
                     help="enable the repro.obs plane for this run and "

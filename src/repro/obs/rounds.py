@@ -43,7 +43,13 @@ class RoundRecord:
     this round — 0 after warmup is the zero-retrace guarantee, observed
     live.  ``repair_ms`` is the host-side schedule rebuild triggered by
     NDMP repair/churn (0 on quiescent rounds); ``commit_ms`` times the
-    staged-swap commit at the step boundary."""
+    staged-swap commit at the step boundary.
+
+    ``faults_injected`` counts the :mod:`repro.faults` injections
+    (drops/delays/dups/crashes/partition events) that landed during the
+    round; ``degraded_edges`` is how many directed data-plane edges the
+    round's unreachable-edge mask zeroed — together they show what was
+    injected vs. what the round actually had to survive."""
 
     round: int
     loop: str
@@ -62,6 +68,8 @@ class RoundRecord:
     left: Tuple[int, ...] = ()
     repair_ms: float = 0.0
     commit_ms: float = 0.0
+    faults_injected: int = 0
+    degraded_edges: int = 0
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:

@@ -205,7 +205,9 @@ class OverlayController:
                  clients_per_device: int = 1,
                  fuse: Optional[str] = None,
                  codec=None,
-                 flat_io: bool = False):
+                 flat_io: bool = False,
+                 repair_policy=None,
+                 swap_barrier: Optional[Callable[[], None]] = None):
         """``capacity`` switches the controller into fixed-capacity slot
         mode (:mod:`repro.runtime`): it owns a
         :class:`~repro.runtime.slots.SlotMap`, pads every rebuilt
@@ -247,6 +249,23 @@ class OverlayController:
         produce the raveled (capacity, N) flat buffer directly
         (resident flat params; global kind + fedlay/ring only), skipping
         the per-round ravel/unravel.
+
+        ``repair_policy`` (a :class:`repro.faults.RepairPolicy`) makes
+        NDMP repair *bounded instead of assumed*: after each control
+        window, while ``sim.correctness()`` is below the policy target
+        the controller re-advances the simulator by decorrelated-jitter
+        backoff delays (giving repair traffic time to land) up to
+        ``max_retries`` times, then proceeds degraded — tallied as
+        ``faults.repair_retries`` / ``repair_recovered`` /
+        ``repair_gave_up``.
+
+        ``swap_barrier`` is the multi-process-mesh fault hook: a
+        callable invoked in :meth:`commit` *before* a staged swap goes
+        live (all processes must flip mixers at the same step
+        boundary).  If it raises, the swap stays staged for the next
+        boundary — the live mixer keeps serving — and
+        ``faults.swap_barrier_aborts`` increments.  Single-process
+        callers leave it None (no barrier, today's behavior).
         """
         if mixer_kind not in MIXER_KINDS:
             raise ValueError(f"unknown mixer kind {mixer_kind!r}; "
@@ -293,6 +312,12 @@ class OverlayController:
                                               fuse=self.fuse,
                                               codec=self.codec))
         self.cache = MixerCache(mixer_factory, maxsize=cache_size)
+        self.repair_policy = repair_policy
+        self.swap_barrier = swap_barrier
+        self.repair_retries = 0
+        self.repair_recovered = 0
+        self.repair_gave_up = 0
+        self.swap_barrier_aborts = 0
         self.rebuilds = 0
         self.swaps = 0
         self.last_commit_ms = 0.0
@@ -378,6 +403,8 @@ class OverlayController:
         self._applied_until = max(self._applied_until, t_end)
         ChurnTrace.apply(self.sim, sorted(due, key=lambda e: e.time))
         self.sim.run_until(t_end)
+        if self.repair_policy is not None:
+            self._repair_retry()
         delta = self.tracker.poll()
         if self._staged is None:
             self.last_plan = None
@@ -415,6 +442,16 @@ class OverlayController:
         took (0 when nothing was staged) — the per-round commit-latency
         fact the :class:`repro.obs.rounds.RoundLedger` records."""
         if self._staged is not None:
+            if self.swap_barrier is not None:
+                try:
+                    self.swap_barrier()
+                except Exception:
+                    # a peer missed the boundary: keep serving the live
+                    # mixer, leave the swap staged for the next commit
+                    self.swap_barrier_aborts += 1
+                    get_telemetry().count("faults.swap_barrier_aborts")
+                    self.last_commit_ms = 0.0
+                    return self.last_plan
             staged, self._staged = self._staged, None
             t0 = _time.perf_counter()
             self._apply(staged)
@@ -428,6 +465,28 @@ class OverlayController:
         return self.last_plan
 
     # ---- internals -------------------------------------------------------
+    def _repair_retry(self) -> bool:
+        """Bounded wait-for-repair: advance the simulator by backoff
+        delays until correctness recovers or the retry budget runs out.
+        Returns True when the overlay met the target."""
+        pol = self.repair_policy
+        if self.sim.correctness() >= pol.correctness_target:
+            pol.backoff.reset()
+            return True
+        bus = get_telemetry()
+        for _ in range(pol.max_retries):
+            self.repair_retries += 1
+            bus.count("faults.repair_retries")
+            self.sim.run_until(self.sim.now + pol.backoff.next_delay())
+            if self.sim.correctness() >= pol.correctness_target:
+                self.repair_recovered += 1
+                bus.count("faults.repair_recovered")
+                pol.backoff.reset()
+                return True
+        self.repair_gave_up += 1
+        bus.count("faults.repair_gave_up")
+        return False
+
     def _alive_addresses(self) -> Tuple[NodeAddress, ...]:
         return tuple(sorted(self.sim.alive_addresses(),
                             key=lambda a: a.node_id))

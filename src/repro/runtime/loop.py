@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.mixing import multirate_participation
+from ..faults.plan import DataFaults, edge_mask_for
 from ..overlay.controller import OverlayController
 from ..overlay.events import ChurnTrace
 from ..overlay.runtime import joiner_donors
@@ -170,7 +171,8 @@ class SlotTrainLoop:
                  step_time: float = 1.0,
                  jit_local_step: bool = True,
                  mesh=None, client_axis: str = "data",
-                 telemetry=None, ledger=None, trace_count=None):
+                 telemetry=None, ledger=None, trace_count=None,
+                 health=None):
         """``telemetry`` / ``ledger`` opt into the :mod:`repro.obs`
         plane: an explicit bus / :class:`~repro.obs.rounds.RoundLedger`
         to report into (default: the process globals, which are the
@@ -178,7 +180,18 @@ class SlotTrainLoop:
         the step is jitted through :func:`counting_jit` and
         :attr:`trace_count` tracks its traces; callers that jit their
         own step (``jit_local_step=False``) may pass the matching
-        ``trace_count`` so per-round retrace deltas stay observable."""
+        ``trace_count`` so per-round retrace deltas stay observable.
+
+        When the controller's simulator is a
+        :class:`repro.faults.ChaosEngine` (it exposes ``data_faults()``)
+        the loop runs **degraded rounds**: every step it lowers the
+        active link outages / stragglers / partition to the (capacity,
+        2L) unreachable-edge mask and passes it to the masked mixer's
+        keyword-only ``edge_mask`` — a runtime input, so fault storms
+        cost zero retraces.  ``health`` (a
+        :class:`repro.faults.HealthTracker`) folds locally-observed
+        suspect/evicted peers into the same mask through the versioned
+        suspect → evict → heal lifecycle."""
         import jax
 
         if controller.slots is None:
@@ -206,6 +219,14 @@ class SlotTrainLoop:
         self._step = 0
         self._telemetry = telemetry
         self._ledger = ledger
+        self.health = health
+        # degraded-round plumbing: a ChaosEngine (or anything exposing
+        # data_faults()) wrapped around the controller's simulator
+        self._chaos_engine = (controller.sim
+                              if hasattr(controller.sim, "data_faults")
+                              else None)
+        self._faults_on = self._chaos_engine is not None or health is not None
+        self._last_fault_count = 0
         self.trace_count = (trace_count if trace_count is not None
                             else TraceCount())
         self._last_traces = 0
@@ -360,6 +381,37 @@ class SlotTrainLoop:
             mask[slot_of[u]] *= part[i]
         return mask
 
+    def _edge_mask(self, now: float) -> Tuple[Optional[np.ndarray], int]:
+        """The round's (capacity, 2L) unreachable-edge mask, or (None,
+        0) when no fault plumbing is configured.  Chaos-engine
+        data-plane faults and HealthTracker verdicts are unioned; the
+        mask is host-built numpy, consumed as a runtime input."""
+        if not self._faults_on:
+            return None, 0
+        df = (self._chaos_engine.data_faults()
+              if self._chaos_engine is not None else DataFaults())
+        if self.health is not None:
+            self.health.poll(now)
+            bad = self.health.unhealthy()
+            if bad:
+                df = DataFaults(down_pairs=df.down_pairs,
+                                slow_nodes=df.slow_nodes | bad,
+                                groups=df.groups)
+        ctl = self.controller
+        slot_nodes = [ctl.slots.node_at(s) for s in range(self.capacity)]
+        em = edge_mask_for(ctl.schedule, slot_nodes, df)
+        return em, int((em == 0.0).sum())
+
+    def _faults_injected(self) -> int:
+        """Chaos-engine injections since the previous round."""
+        if self._chaos_engine is None or not hasattr(self._chaos_engine,
+                                                     "counts"):
+            return 0
+        total = sum(self._chaos_engine.counts.values())
+        delta, self._last_fault_count = (total - self._last_fault_count,
+                                         total)
+        return delta
+
     def _capacity_batch(self, alive: Tuple[int, ...], step: int):
         """Scatter the alive-set batch onto capacity rows (dead slots
         replay row 0's data; their compute is discarded by the mask)."""
@@ -375,9 +427,97 @@ class SlotTrainLoop:
         return self._jax.tree.map(
             lambda l: jnp.take(l, gather, axis=0), batch)
 
+    # ---- crash/resume ----------------------------------------------------
+    def state_dict(self) -> Dict[str, object]:
+        """The full slot-runtime training state: the capacity-stacked
+        params (flat (capacity, N) buffer in resident-flat mode), the
+        optimizer state, and — for an error-feedback codec — the
+        residual leaf.  Everything else (schedules, mixers, slot map)
+        is a pure function of the controller's simulator, which the
+        resume path reconstructs by replaying the control plane."""
+        state = {"params": self.params, "opt_state": self.opt_state}
+        if self.ef:
+            state["residual"] = self.residual
+        return state
+
+    def save(self, path: str) -> None:
+        """Checkpoint the training state + step counter + slot
+        occupancy to ``path`` (:mod:`repro.ckpt.checkpoint` npz).
+
+        The state is saved as its flattened leaf list (optimizer states
+        are often NamedTuples/dataclasses the checkpoint treedef spec
+        doesn't cover); :meth:`restore` unflattens against the live
+        loop's own structure, so a resume must build the loop the same
+        way (same capacity, codec, flat_io, optimizer)."""
+        from ..ckpt.checkpoint import save as ckpt_save
+        state = self.state_dict()
+        leaves = [np.asarray(l) for l in self._jax.tree.leaves(state)]
+        occupancy = [(-1 if self.controller.slots.node_at(s) is None
+                      else int(self.controller.slots.node_at(s)))
+                     for s in range(self.capacity)]
+        ckpt_save(path, {"leaves": leaves},
+                  metadata={"step": int(self._step), "slots": occupancy,
+                            "ef": bool(self.ef),
+                            "flat_io": bool(self.flat_io)})
+
+    def restore(self, path: str) -> dict:
+        """Exact resume from :meth:`save`: restores params / optimizer
+        state / EF residual bit-for-bit and the step counter, after
+        validating that this loop's slot occupancy matches the
+        checkpoint's (the caller replays the control plane — same
+        simulator seed and control windows — before restoring, see
+        ``tests/test_faults.py``).  Returns the checkpoint metadata."""
+        from ..ckpt.checkpoint import load as ckpt_load
+        tree, meta = ckpt_load(path)
+        if bool(meta.get("ef")) != self.ef or \
+                bool(meta.get("flat_io")) != self.flat_io:
+            raise ValueError(
+                "checkpoint was written by a loop with a different "
+                f"wire configuration (ef={meta.get('ef')}, "
+                f"flat_io={meta.get('flat_io')})")
+        occupancy = [(-1 if self.controller.slots.node_at(s) is None
+                      else int(self.controller.slots.node_at(s)))
+                     for s in range(self.capacity)]
+        if list(meta.get("slots", ())) != occupancy:
+            raise ValueError(
+                "slot occupancy mismatch: replay the control plane to "
+                f"the checkpoint step first (ckpt {meta.get('slots')} "
+                f"vs live {occupancy})")
+        template = self.state_dict()
+        treedef = self._jax.tree.structure(template)
+        want = self._jax.tree.leaves(template)
+        leaves = tree["leaves"]
+        if len(leaves) != len(want):
+            raise ValueError(f"checkpoint has {len(leaves)} leaves, "
+                             f"this loop expects {len(want)}")
+        jnp = self._jax.numpy
+        restored = []
+        for have, exp in zip(leaves, want):
+            arr = jnp.asarray(have)
+            if arr.shape != exp.shape or arr.dtype != exp.dtype:
+                raise ValueError(
+                    f"leaf mismatch: checkpoint {arr.shape}/{arr.dtype} "
+                    f"vs live {exp.shape}/{exp.dtype}")
+            restored.append(arr)
+        state = self._jax.tree.unflatten(treedef, restored)
+        self.params = self._shard_rows(state["params"])
+        self.opt_state = self._shard_rows(state["opt_state"])
+        if self.ef:
+            self.residual = self._shard_rows(state["residual"])
+        self._step = int(meta["step"])
+        # retrace accounting restarts at the live counter: the resumed
+        # process pays its own (unavoidable) first traces
+        self._last_traces = self.trace_count.traces
+        self._last_fault_count = (
+            sum(self._chaos_engine.counts.values())
+            if self._chaos_engine is not None
+            and hasattr(self._chaos_engine, "counts") else 0)
+        return meta
+
     # ---- telemetry -------------------------------------------------------
     def _record_round(self, ledger, step: int, report, participating: int,
-                      loss: float, joined, left) -> None:
+                      loss: float, joined, left, faults_injected: int = 0,
+                      degraded_edges: int = 0) -> None:
         """One :class:`repro.obs.rounds.RoundRecord`: the closed-form
         wire/payload bytes for this round's participation, the retrace
         delta, and the control-plane latencies (repair = the schedule
@@ -410,7 +550,8 @@ class SlotTrainLoop:
             retraces=self.trace_count.retraces, retrace_delta=delta,
             swapped=report.swapped, rebuilt=report.rebuilt,
             cache_hit=report.cache_hit, joined=joined, left=left,
-            repair_ms=report.rebuild_ms, commit_ms=ctl.last_commit_ms)
+            repair_ms=report.rebuild_ms, commit_ms=ctl.last_commit_ms,
+            faults_injected=faults_injected, degraded_edges=degraded_edges)
 
     # ---- the loop --------------------------------------------------------
     def run(self, num_steps: int,
@@ -451,16 +592,22 @@ class SlotTrainLoop:
             mix_mask = self._shard_rows(
                 jnp.asarray(self._mix_mask(alive, alive_mask, step)))
             batch = self._shard_rows(self._capacity_batch(alive, step))
+            em_np, degraded = self._edge_mask(report.time)
             params, opt_state, metrics = self.local_step(
                 self.params, self.opt_state, batch, mask)
             # the hot-swap seam: the controller's mask-aware mixer; slow
             # or dead slots pass through untouched.  EF codecs thread
-            # the residual leaf through the round.
+            # the residual leaf through the round.  Under a fault plane
+            # the edge mask is passed every round (even all-ones, so the
+            # arity — and thus the trace — never changes mid-run).
+            mkw = ({} if em_np is None
+                   else {"edge_mask": self._shard_rows(jnp.asarray(em_np))})
             if self.ef:
-                mixed, res = ctl.mixer(params, mix_mask, self.residual)
+                mixed, res = ctl.mixer(params, mix_mask, self.residual,
+                                       **mkw)
                 self.residual = self._shard_rows(res)
             else:
-                mixed = ctl.mixer(params, mix_mask)
+                mixed = ctl.mixer(params, mix_mask, **mkw)
             self.params = self._shard_rows(mixed)
             self.opt_state = self._shard_rows(opt_state)
             part = int(np.asarray(mix_mask).sum())
@@ -480,6 +627,8 @@ class SlotTrainLoop:
                       else get_round_ledger())
             if ledger is not None:
                 self._record_round(ledger, step, report, part, loss,
-                                   joined, left)
+                                   joined, left,
+                                   faults_injected=self._faults_injected(),
+                                   degraded_edges=degraded)
             self._step += 1
         return self.records

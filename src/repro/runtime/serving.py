@@ -84,12 +84,23 @@ class Request:
     The loop fills ``tokens`` and the latency stamps: ``t_arrival``
     when the request became eligible (entered the queue), ``t_first``
     at its first sampled token, ``t_done`` at completion — all
-    ``perf_counter`` seconds."""
+    ``perf_counter`` seconds.
+
+    Deadlines (straggler timeout): ``max_ticks`` bounds how many
+    batching ticks the request may occupy a slot after admission;
+    ``deadline_s`` is a wall-clock bound measured from ``t_arrival``.
+    A request over either bound is force-retired with ``evicted=True``
+    (and a ``serve.evictions`` counter) so a stuck generation can never
+    occupy capacity forever."""
 
     rid: int
     prompt: np.ndarray
     max_new: int = 16
     arrival_tick: int = 0
+    max_ticks: Optional[int] = None
+    deadline_s: Optional[float] = None
+    admit_tick: int = -1
+    evicted: bool = False
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_arrival: float = 0.0
     t_first: float = 0.0
@@ -193,16 +204,22 @@ class ServeLoop:
 
     # ---- request intake --------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new: int = 16,
-               arrival_tick: int = 0) -> Request:
-        """Queue one request; returns its :class:`Request` handle."""
+               arrival_tick: int = 0, max_ticks: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        """Queue one request; returns its :class:`Request` handle.
+        ``max_ticks`` / ``deadline_s`` set its eviction deadlines (see
+        :class:`Request`)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size < 1:
             raise ValueError("prompt must be a non-empty 1-D token list")
         if prompt.size > self.prompt_len:
             raise ValueError(f"prompt length {prompt.size} > static "
                              f"prompt_len {self.prompt_len}")
+        if max_ticks is not None and max_ticks < 1:
+            raise ValueError("max_ticks must be >= 1")
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      arrival_tick=arrival_tick, t_arrival=_CLOCK())
+                      arrival_tick=arrival_tick, max_ticks=max_ticks,
+                      deadline_s=deadline_s, t_arrival=_CLOCK())
         self._next_rid += 1
         self.pending.append(req)
         get_telemetry().count("serve.submitted")
@@ -232,6 +249,7 @@ class ServeLoop:
         self.cache, self._tok = self._insert_j(
             self.cache, row, jnp.asarray(slot, jnp.int32), tok, self._tok)
         self._pos_host[slot] = req.prompt.size
+        req.admit_tick = self.tick_index
         req.t_first = _CLOCK()
         req.tokens.append(int(tok[0, 0]))
         self.active[slot] = req
@@ -257,6 +275,7 @@ class ServeLoop:
         bus = get_telemetry()
         completed_before = len(self.completed)
         n_admit = 0
+        n_evict = self._evict_overdue()
         # static batching = the one-line policy difference: only an
         # EMPTY batch may admit, and then it drains completely
         allow = self.policy == "continuous" or len(self.slots) == 0
@@ -289,8 +308,29 @@ class ServeLoop:
                           retraces=self.retraces,
                           admitted=n_admit,
                           completed=len(self.completed) - completed_before,
+                          evicted=n_evict,
                           queue_depth=len(self.pending))
         return len(self.active)
+
+    def _evict_overdue(self) -> int:
+        """Force-retire active requests past their deadlines (straggler
+        timeout): the slot frees before this tick's admissions, so a
+        stuck generation yields capacity the moment it expires."""
+        bus = get_telemetry()
+        n = 0
+        now = _CLOCK()
+        for slot, req in list(self.active.items()):
+            over_ticks = (req.max_ticks is not None
+                          and self.tick_index - req.admit_tick
+                          >= req.max_ticks)
+            over_wall = (req.deadline_s is not None
+                         and now - req.t_arrival >= req.deadline_s)
+            if over_ticks or over_wall:
+                req.evicted = True
+                self._retire(slot, req)
+                bus.count("serve.evictions")
+                n += 1
+        return n
 
     def run(self, max_ticks: int = 100_000) -> List[Request]:
         """Tick until every submitted request has completed (or

@@ -66,6 +66,12 @@ class VectorSimulator:
         self._latency = float(latency)
         self.now = 0.0
         self.churn_ops = 0
+        # fault seams (repro.faults): a message-loss delay multiplier
+        # (retransmission under loss-rate p stretches every protocol
+        # deadline by ~1/(1-p) in expectation) and an active partition —
+        # row groups whose rings rebuild independently until healed.
+        self._delay_scale = 1.0
+        self._partition: Optional[List[np.ndarray]] = None
 
         n0 = 0
         self._ids = np.empty((n0,), dtype=np.int64)
@@ -150,18 +156,26 @@ class VectorSimulator:
     def _rebuild_tables(self) -> None:
         """Vectorized pointer repair: recompute every ring's adjacency
         over the rows visible *now*, in one lexsort+roll per space, and
-        bump versions where a pointer actually moved."""
+        bump versions where a pointer actually moved.  Under an active
+        partition each group's ring rebuilds independently — the
+        converged image of cross-group failure detection + within-group
+        repair."""
         u = self._used
         vis = self._visible_rows()
+        if self._partition is not None:
+            vis_groups = [np.intersect1d(vis, g) for g in self._partition]
+        else:
+            vis_groups = [vis]
         delta = np.zeros((u,), dtype=np.int64)
         for s in range(self.num_spaces):
             new = np.full((u,), _NONE, dtype=np.int64)
             new_p = np.full((u,), _NONE, dtype=np.int64)
-            if len(vis) > 1:
-                order = vis[np.lexsort((self._ids[vis],
-                                        self._coords[vis, s]))]
-                new[order] = np.roll(order, -1)
-                new_p[order] = np.roll(order, 1)
+            for grp in vis_groups:
+                if len(grp) > 1:
+                    order = grp[np.lexsort((self._ids[grp],
+                                            self._coords[grp, s]))]
+                    new[order] = np.roll(order, -1)
+                    new_p[order] = np.roll(order, 1)
             delta += (new != self._succ[s, :u]).astype(np.int64)
             delta += (new_p != self._pred[s, :u]).astype(np.int64)
             self._succ[s, :u] = new
@@ -189,13 +203,65 @@ class VectorSimulator:
     # ---- timing constants (see class docstring) --------------------------
     def _join_delay(self) -> float:
         m = max(int(self._alive[:self._used].sum()), 2)
-        return self._latency * (3.0 + math.log2(m))
+        return self._latency * (3.0 + math.log2(m)) * self._delay_scale
 
     def _leave_delay(self) -> float:
-        return 2.0 * self._latency
+        return 2.0 * self._latency * self._delay_scale
 
     def _fail_delay(self) -> float:
-        return 3.0 * self.heartbeat_period + 2.0 * self._latency
+        return (3.0 * self.heartbeat_period
+                + 2.0 * self._latency * self._delay_scale)
+
+    # ---- fault seams (repro.faults) --------------------------------------
+    def set_delay_scale(self, scale: float) -> None:
+        """Stretch every protocol deadline by ``scale`` ≥ 1 — the
+        converged-outcome image of message loss: under loss rate p each
+        protocol exchange retries ~1/(1-p) times before landing, so
+        joins splice, leaves notify, and failures repair later, but the
+        converged tables are unchanged (still ring adjacency over the
+        visible membership).  The per-message analogue is the object
+        simulator's :meth:`repro.core.ndmp.Simulator.set_message_filter`."""
+        if scale < 1.0:
+            raise ValueError(f"delay scale {scale} < 1")
+        self._delay_scale = float(scale)
+
+    def set_partition(self, groups: Sequence[Sequence[int]]) -> None:
+        """Partition the overlay into disjoint node-id ``groups``: after
+        the failure-detection delay, every ring rebuilds independently
+        per group (cross-group entries repaired away), exactly the
+        converged state the object simulator reaches when a message
+        filter drops all cross-group traffic.  Node ids absent from
+        every group form no ring (unreachable from anywhere)."""
+        rows = []
+        seen: set = set()
+        for g in groups:
+            grp = np.asarray(sorted({self._row_of[int(u)] for u in g}),
+                             dtype=np.int64)
+            if seen & set(grp.tolist()):
+                raise ValueError("partition groups overlap")
+            seen |= set(grp.tolist())
+            rows.append(grp)
+        self._partition = rows
+        self._queue_rebuild(self.now + self._fail_delay())
+
+    def heal_partition(self) -> None:
+        """Lift the active partition: after the discovery-route delay
+        the rings re-merge over the full visible membership (the
+        converged image of the object simulator's cross-side
+        :meth:`~repro.core.ndmp.Simulator.rejoin` sweep)."""
+        self._partition = None
+        self._queue_rebuild(self.now + self._join_delay())
+
+    def rejoin(self, node_id: int, bootstrap: Optional[int] = None) -> None:
+        """Protocol-surface twin of the object simulator's ``rejoin``:
+        an alive node re-anchoring through ``bootstrap``.  Membership is
+        unchanged; tables re-converge after the discovery delay."""
+        del bootstrap
+        r = self._row_of.get(int(node_id))
+        if r is None or not self._alive[r]:
+            raise KeyError(f"node {int(node_id)} is not alive")
+        self.churn_ops += 1
+        self._queue_rebuild(self.now + self._join_delay())
 
     # ---- batched churn ---------------------------------------------------
     def seed_network(self, node_ids: Sequence[int]) -> None:

@@ -118,6 +118,10 @@ def pytest_configure(config):
         "markers",
         "multi_device: exercises real multi-device shard_map programs "
         "(needs the forced 8-device CPU mesh)")
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection storms (repro.faults) — seeded chaos "
+        "traces over the NDMP engines and the slot loop")
 
 
 @pytest.fixture

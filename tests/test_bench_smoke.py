@@ -260,3 +260,48 @@ def test_benchmarks_quick_serve_load_json():
         assert load[policy]["distinct_occupancies"] >= 3, load
         assert load[policy]["p99_ms"] >= load[policy]["p50_ms"] > 0
     assert load["continuous_vs_static"]["continuous_wins"] == 1, load
+
+
+def test_baseline_malformed_artifact_warns_and_skips(capsys):
+    """ISSUE 10 satellite: --baseline must degrade to "no comparison"
+    (warn on stderr, return None) on a missing, truncated, non-object,
+    or bad-rows BENCH artifact instead of crashing the gate."""
+    import json as _json
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.run import _load_baseline
+    finally:
+        sys.path.remove(REPO)
+    name = "zz_unit_malformed"          # never committed, never tracked
+    path = os.path.join(REPO, f"BENCH_{name}.json")
+    try:
+        # missing artifact: clean None, no warning
+        assert _load_baseline(name, quick=True) is None
+        assert "WARNING" not in capsys.readouterr().err
+
+        with open(path, "w") as f:      # truncated JSON
+            f.write('{"rows": [')
+        assert _load_baseline(name, quick=True) is None
+        assert "skipping comparison" in capsys.readouterr().err
+
+        with open(path, "w") as f:      # valid JSON, not an object
+            _json.dump([1, 2, 3], f)
+        assert _load_baseline(name, quick=True) is None
+        err = capsys.readouterr().err
+        assert "WARNING" in err and "expected a JSON object" in err
+
+        with open(path, "w") as f:      # rows that aren't objects
+            _json.dump({"quick": True, "failed": False,
+                        "rows": [1, 2]}, f)
+        assert _load_baseline(name, quick=True) is None
+        assert "malformed rows" in capsys.readouterr().err
+
+        with open(path, "w") as f:      # healthy artifact still loads
+            _json.dump({"quick": True, "failed": False,
+                        "rows": [{"table": "t", "x": 1}]}, f)
+        assert _load_baseline(name, quick=True) == [{"table": "t", "x": 1}]
+        # mode mismatch / failed runs stay silently incomparable
+        assert _load_baseline(name, quick=False) is None
+    finally:
+        if os.path.exists(path):
+            os.remove(path)

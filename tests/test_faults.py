@@ -1,0 +1,531 @@
+"""repro.faults — the deterministic fault-injection plane.
+
+Acceptance pins (ISSUE 10): under a seeded :class:`FaultPlan` with 10%
+NDMP message loss, one 2-way partition-and-heal, and stragglers, both
+NDMP engines converge back to a valid near-regular topology with
+table-identical state; degraded-round mixing (unreachable edges
+dropped + renormalized through the runtime ``edge_mask``) equals the
+dense renormalized oracle within 1e-6 at zero retraces on the same
+MixerCache entry; and crash/resume through the checkpoint plane is
+loss-parity <= 1e-6 against the uninterrupted run.  Plus unit coverage
+for the plan vocabulary, the data-plane edge mask, decorrelated-jitter
+backoff, the versioned suspect -> evict -> heal lifecycle, the
+controller's bounded repair retry, and the swap-barrier abort hook.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mixing import masked_mixing_matrix
+from repro.core.ndmp import Simulator
+from repro.faults import (BackoffPolicy, ChaosEngine, DataFaults, FaultPlan,
+                          HealthState, HealthTracker, LinkOutage, Partition,
+                          RepairPolicy, Straggler, edge_mask_for)
+from repro.obs import telemetry
+from repro.obs.rounds import round_ledger
+from repro.overlay import OverlayController
+from repro.runtime import SlotTrainLoop, counting_jit, masked_local_step
+from repro.scale import VectorSimulator
+
+KW = dict(num_spaces=2, latency=0.05, heartbeat_period=0.5,
+          probe_period=1.0)
+
+
+def make_sim(n=6, seed=0):
+    sim = Simulator(seed=seed, **KW)
+    sim.seed_network(list(range(n)))
+    return sim
+
+
+# --------------------------------------------------------------------------
+# Plan vocabulary
+# --------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="msg_loss"):
+        FaultPlan(msg_loss=1.0)
+    with pytest.raises(ValueError, match="msg_dup"):
+        FaultPlan(msg_dup=-0.1)
+    with pytest.raises(ValueError, match="after start"):
+        Partition(5.0, 5.0, ((0,), (1,)))
+    with pytest.raises(ValueError, match=">= 2 groups"):
+        Partition(0.0, 1.0, ((0, 1),))
+    with pytest.raises(ValueError, match="overlap"):
+        Partition(0.0, 1.0, ((0, 1), (1, 2)))
+    p = Partition(0.0, 1.0, ((0, 1), (2, 3)))
+    assert p.group_of(2) == 1 and p.group_of(9) is None
+    assert not FaultPlan().message_faults
+    assert FaultPlan(msg_dup=0.1).message_faults
+
+
+def test_delay_scale_closed_form():
+    assert FaultPlan().delay_scale() == 1.0
+    assert FaultPlan(msg_loss=0.5).delay_scale() == pytest.approx(2.0)
+    # q=0.2 of messages take delay_factor=3 extra latencies
+    assert FaultPlan(msg_delay=0.2, delay_factor=3.0).delay_scale() == \
+        pytest.approx(1.6)
+
+
+def test_data_faults_edge_down():
+    df = DataFaults(down_pairs=frozenset({(1, 2)}),
+                    slow_nodes=frozenset({5}),
+                    groups=((0, 1), (3, 4)))
+    assert not df.edge_down(7, 7)               # self never down
+    assert df.edge_down(2, 1) and df.edge_down(1, 2)   # undirected pair
+    assert df.edge_down(5, 0) and df.edge_down(0, 5)   # straggler
+    assert df.edge_down(0, 3) and df.edge_down(4, 1)   # cross-partition
+    assert not df.edge_down(0, 1)               # same side
+    assert not df.edge_down(0, 7)               # 7 outside the partition
+    assert not DataFaults()
+    assert DataFaults(slow_nodes=frozenset({1}))
+
+
+def test_edge_mask_for_stragglers_and_empty_slots():
+    from repro.core.mixing import build_permute_schedule
+    sched = build_permute_schedule(4, 2)
+    slot_nodes = [10, 11, None, 13]
+    em = edge_mask_for(sched, slot_nodes,
+                       DataFaults(slow_nodes=frozenset({11})))
+    perms = np.asarray(sched.perms)
+    assert em.shape == (4, perms.shape[0])
+    assert set(np.unique(em)) <= {0.0, 1.0}
+    for i in range(4):
+        for k in range(perms.shape[0]):
+            src = slot_nodes[perms[k, i]]
+            down = (slot_nodes[i] is not None and src is not None
+                    and (slot_nodes[i] == 11 or src == 11)
+                    and slot_nodes[i] != src)
+            assert em[i, k] == (0.0 if down else 1.0), (i, k)
+    # empty slot's own row untouched
+    np.testing.assert_array_equal(em[2], 1.0)
+    # no faults: the all-ones fast path
+    np.testing.assert_array_equal(
+        edge_mask_for(sched, slot_nodes, DataFaults()), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Backoff / health / repair policies
+# --------------------------------------------------------------------------
+
+def test_backoff_deterministic_and_capped():
+    a, b = BackoffPolicy(base=0.5, cap=8.0, seed=3), \
+        BackoffPolicy(base=0.5, cap=8.0, seed=3)
+    seq = [a.next_delay() for _ in range(12)]
+    assert seq == [b.next_delay() for _ in range(12)]   # seeded replay
+    assert all(0.5 <= d <= 8.0 for d in seq)
+    assert max(seq) == 8.0 or max(seq) > 4.0            # grows toward cap
+    a.reset()
+    assert a.next_delay() == seq[0]                     # reset replays
+    with pytest.raises(ValueError):
+        BackoffPolicy(base=0.0)
+    with pytest.raises(ValueError):
+        BackoffPolicy(base=2.0, cap=1.0)
+
+
+def test_health_tracker_versioned_lifecycle():
+    h = HealthTracker(suspect_grace=2.0)
+    assert h.state_of(7) is HealthState.HEALTHY
+    v1 = h.suspect(7, now=10.0)
+    assert h.state_of(7) is HealthState.SUSPECT
+    assert h.suspect(7, now=10.5) == v1       # idempotent while suspect
+    h.poll(11.0)                              # inside grace: still suspect
+    assert h.state_of(7) is HealthState.SUSPECT
+    h.poll(12.0)                              # grace expired: evicted
+    assert h.state_of(7) is HealthState.EVICTED
+    assert h.unhealthy() == frozenset({7}) == h.evicted()
+    # a stale heal (observed at the suspect version) must NOT resurrect
+    assert not h.heal(7, v1, now=12.5)
+    assert h.state_of(7) is HealthState.EVICTED
+    # a heal quoting the current version does
+    assert h.heal(7, h.version_of(7), now=13.0)
+    assert h.state_of(7) is HealthState.HEALTHY
+    assert h.unhealthy() == frozenset()
+    assert not h.heal(7, h.version_of(7))     # healthy: heal is a no-op
+
+
+def test_controller_repair_retry_recovers_after_fail():
+    sim = make_sim(6)
+    ctl = OverlayController(sim, capacity=8, repair_policy=RepairPolicy())
+    sim.fail(2)
+    assert sim.correctness() < 1.0
+    ctl.step(0.2)     # window too short for 3T detection: retries kick in
+    assert sim.correctness() == 1.0
+    assert ctl.repair_retries >= 1
+    assert ctl.repair_recovered == 1 and ctl.repair_gave_up == 0
+
+
+def test_controller_repair_retry_bounded_gives_up():
+    ctl = OverlayController(make_sim(6), capacity=8,
+                            repair_policy=RepairPolicy(max_retries=3))
+
+    class _Stuck:
+        now = 0.0
+
+        def correctness(self):
+            return 0.5
+
+        def run_until(self, t):
+            self.now = t
+
+    ctl.sim = _Stuck()
+    assert not ctl._repair_retry()
+    assert ctl.repair_retries == 3
+    assert ctl.repair_gave_up == 1 and ctl.repair_recovered == 0
+
+
+def test_swap_barrier_abort_keeps_swap_staged():
+    from repro.overlay import ChurnTrace
+    calls = []
+    armed = []
+
+    def barrier():
+        calls.append(1)
+        if armed:
+            armed.pop()
+            raise RuntimeError("peer missed the boundary")
+
+    sim = make_sim(6)
+    ctl = OverlayController(sim, capacity=8, double_buffered=True,
+                            swap_barrier=barrier)
+    mixer0 = ctl.mixer
+    trace = ChurnTrace.scripted([(sim.now + 0.1, "fail", 4)])
+    for _ in range(20):
+        r = ctl.step(1.0, trace=trace)
+        trace = None
+        if r.swapped:
+            break
+    assert r.swapped
+    before = len(calls)
+    armed.append(True)
+    ctl.commit()                       # barrier raises -> abort
+    assert ctl.swap_barrier_aborts == 1
+    assert ctl.mixer is mixer0         # still serving the live program
+    assert ctl.last_commit_ms == 0.0
+    ctl.commit()                       # barrier passes -> swap lands
+    assert len(calls) == before + 2
+    assert ctl.mixer is not mixer0 and 4 not in ctl.slots
+
+
+# --------------------------------------------------------------------------
+# ChaosEngine event execution + transport filter
+# --------------------------------------------------------------------------
+
+def test_chaos_crash_guard_and_rejoin():
+    plan = FaultPlan(crashes=((1.0, 3), (2.0, 3)),
+                     rejoins=((5.0, 3, 0),))
+    sim = ChaosEngine(make_sim(8), plan)
+    sim.run_until(3.0)
+    assert sim.counts["crashes"] == 1         # second crash: already dead
+    assert 3 not in sim.alive_ids()
+    sim.run_until(40.0)
+    assert sim.counts["rejoins"] == 1         # dead node joins fresh
+    assert 3 in sim.alive_ids()
+    assert sim.correctness() == 1.0
+
+
+def test_chaos_message_faults_counted_and_absorbed():
+    plan = FaultPlan(seed=1, msg_loss=0.1, msg_delay=0.2, msg_dup=0.2)
+    sim = ChaosEngine(make_sim(6), plan)
+    sim.advance(10.0)
+    for key in ("msg_dropped", "msg_delayed", "msg_duped"):
+        assert sim.counts.get(key, 0) > 0, key
+    # NDMP's monotone improve_pointer is idempotent under loss, delay,
+    # and at-least-once duplication: the overlay stays correct
+    assert sim.correctness() == 1.0
+
+
+def test_chaos_asymmetric_partition_blocks_one_way():
+    sim = ChaosEngine(make_sim(4), FaultPlan())
+    p = Partition(1.0, 2.0, ((0, 1), (2, 3)), symmetric=False)
+    sim._active.append(p)
+    assert sim._blocked(0, 2) and sim._blocked(1, 3)   # from groups[0]
+    assert not sim._blocked(2, 0) and not sim._blocked(3, 1)
+    assert not sim._blocked(0, 1) and not sim._blocked(2, 3)
+    sym = Partition(1.0, 2.0, ((0, 1), (2, 3)))
+    sim._active = [sym]
+    assert sim._blocked(0, 2) and sim._blocked(2, 0)
+
+
+def test_chaos_data_faults_snapshot_windows():
+    plan = FaultPlan(
+        link_outages=(LinkOutage(1.0, 3.0, a=4, b=2),),
+        stragglers=(Straggler(2.0, 5.0, node=1),),
+        partitions=(Partition(6.0, 8.0, ((0, 1, 2), (3, 4, 5))),))
+    sim = ChaosEngine(make_sim(6), plan)
+    assert not sim.data_faults()                       # t=0: nothing yet
+    sim.run_until(1.5)
+    assert sim.data_faults().down_pairs == frozenset({(2, 4)})
+    sim.run_until(2.5)
+    df = sim.data_faults()
+    assert df.slow_nodes == frozenset({1}) and df.edge_down(1, 0)
+    sim.run_until(6.5)
+    assert sim.data_faults().groups is not None        # partition active
+    sim.run_until(20.0)
+    assert not sim.data_faults()                       # all windows closed
+    assert sim.counts["partition_heals"] == 1
+
+
+# --------------------------------------------------------------------------
+# The acceptance storm: both engines, table-identical
+# --------------------------------------------------------------------------
+
+def _storm_plan(n):
+    half = tuple(range(n // 2)), tuple(range(n // 2, n))
+    return FaultPlan(
+        seed=5, msg_loss=0.10,
+        partitions=(Partition(4.0, 10.0, half),),
+        stragglers=(Straggler(2.0, 20.0, n - 1),
+                    Straggler(2.0, 20.0, n - 2)))
+
+
+@pytest.mark.chaos
+def test_storm_parity_object_vs_vector():
+    """10% NDMP loss + one 2-way partition-and-heal + 2 stragglers:
+    after the storm both engines are at correctness 1.0 with identical
+    neighbor tables and exported flat state — converged NDMP state is a
+    pure function of visible membership, faults or not."""
+    n = 12
+    plan = _storm_plan(n)
+    obj = ChaosEngine(make_sim(n), plan)
+    vec = ChaosEngine(VectorSimulator(**KW), plan)
+    vec.seed_network(range(n))
+    obj.run_until(45.0)
+    vec.run_until(45.0)
+    assert obj.correctness() == 1.0 and vec.correctness() == 1.0
+    assert obj.alive_ids() == vec.alive_ids()
+    assert obj.neighbor_tables() == vec.neighbor_tables()
+    a, b = obj.export_state(), vec.export_state()
+    np.testing.assert_array_equal(a["ids"], b["ids"])
+    np.testing.assert_array_equal(a["succ"], b["succ"])
+    np.testing.assert_array_equal(a["pred"], b["pred"])
+    # the object engine really injected transport faults; the partition
+    # healed through the rejoin sweep on one side and a table rebuild on
+    # the other — both counted
+    assert obj.counts["msg_dropped"] > 0
+    assert obj.counts["partition_starts"] == 1
+    assert obj.counts["partition_heals"] == 1
+    assert obj.counts["rejoins"] >= 1
+    assert vec.counts["partition_heals"] == 1
+
+
+# --------------------------------------------------------------------------
+# Degraded-round mixing ≡ dense renormalized oracle, zero retraces
+# --------------------------------------------------------------------------
+
+DIM = 16
+
+
+def _make_params(u):
+    w = np.random.default_rng(u).normal(size=DIM).astype(np.float32)
+    return {"w": jnp.asarray(w)}
+
+
+def _make_batch(node_ids, step):
+    return {"x": jnp.zeros((len(node_ids), 1), jnp.float32)}
+
+
+def _identity_step(params, opt_state, batch):
+    return params, opt_state, {"loss": jnp.mean(params["w"] ** 2, axis=-1)}
+
+
+def _consensus_loop(sim, capacity, **kw):
+    from repro.optim.optimizers import sgd
+    sjit, scount = counting_jit(masked_local_step(_identity_step))
+    ctl = OverlayController(sim, capacity=capacity)
+    loop = SlotTrainLoop(ctl, local_step=sjit, make_params=_make_params,
+                         optimizer=sgd(0.0), make_batch=_make_batch,
+                         jit_local_step=False, **kw)
+    return loop, scount
+
+
+@pytest.mark.chaos
+def test_degraded_mixing_matches_dense_oracle_zero_retraces():
+    """With stragglers active, every round's mixed params equal the
+    dense renormalized oracle (masked_mixing_matrix with edge_mask)
+    within 1e-6 — and the degraded rounds ride the runtime-weights
+    path: zero local-step retraces, zero new MixerCache entries."""
+    slow = (4, 5)
+    plan = FaultPlan(stragglers=tuple(
+        Straggler(0.0, 1e9, u) for u in slow))
+    chaos = ChaosEngine(make_sim(6), plan)
+    loop, scount = _consensus_loop(chaos, capacity=8)
+    ctl = loop.controller
+    loop.run(1)                                # warmup trace
+    misses = ctl.cache.misses
+    for _ in range(3):
+        X = np.asarray(loop.params["w"]).copy()
+        mask = ctl.alive_mask()
+        em = edge_mask_for(
+            ctl.schedule,
+            [ctl.slots.node_at(s) for s in range(8)],
+            chaos.data_faults())
+        assert (em == 0.0).any()               # faults actually active
+        loop.run(1)
+        W = masked_mixing_matrix(ctl.schedule, mask, em)
+        np.testing.assert_allclose(np.asarray(loop.params["w"]),
+                                   W @ X, atol=1e-6)
+        # an isolated live row degenerates to its own model (total
+        # weight = self weight > 0): the straggler keeps its params
+        for u in slow:
+            s = ctl.slots.slot_of[u]
+            np.testing.assert_allclose(
+                np.asarray(loop.params["w"])[s], X[s], atol=1e-6)
+    assert scount.retraces == 0
+    assert ctl.cache.misses == misses          # same MixerCache entry
+
+
+@pytest.mark.chaos
+@pytest.mark.multi_device
+def test_grouped_storm_zero_retraces_and_oracle(multi_device):
+    """The full acceptance storm on a G=2 grouped mesh (capacity 16 =
+    2 x 8 devices): the slot loop converges through 10% loss + a 2-way
+    partition-and-heal + 2 stragglers with 0 retraces, and the degraded
+    round still equals the dense renormalized oracle."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.compat import make_client_mesh
+    from repro.optim.optimizers import sgd
+
+    n = 12
+    mesh = make_client_mesh(8, "data")
+    chaos = ChaosEngine(make_sim(n), _storm_plan(n))
+    ctl = OverlayController(chaos, capacity=16, clients_per_device=2)
+    sjit, scount = counting_jit(masked_local_step(_identity_step))
+    loop = SlotTrainLoop(ctl, local_step=sjit, make_params=_make_params,
+                         optimizer=sgd(0.0), make_batch=_make_batch,
+                         jit_local_step=False, mesh=mesh)
+    assert loop.params["w"].sharding == NamedSharding(mesh, P("data", None))
+    # 4 warmup rounds put sim.now at 4.0 — the partition has started,
+    # so the oracle round (t in (4, 5]) sees a constant fault snapshot
+    loop.run(4)
+    X = np.asarray(loop.params["w"]).copy()
+    mask = ctl.alive_mask()
+    em = edge_mask_for(ctl.schedule,
+                       [ctl.slots.node_at(s) for s in range(16)],
+                       chaos.data_faults())
+    assert (em == 0.0).any()
+    loop.run(1)
+    W = masked_mixing_matrix(ctl.schedule, mask, em)
+    np.testing.assert_allclose(np.asarray(loop.params["w"]), W @ X,
+                               atol=1e-6)
+    loop.run(20)         # through the heal and out the other side
+    assert scount.retraces == 0
+    assert all(np.isfinite(r.loss) for r in loop.records)
+    assert chaos.counts["partition_heals"] == 1
+    # post-storm: the overlay healed and params stay row-sharded
+    assert chaos.correctness() == 1.0
+    assert loop.params["w"].sharding == NamedSharding(mesh, P("data", None))
+
+
+# --------------------------------------------------------------------------
+# Crash/resume: loss parity vs the uninterrupted run
+# --------------------------------------------------------------------------
+
+def _training_step(params, opt_state, batch):
+    w, x = params["w"], batch["x"]
+    loss = jnp.mean((w - x) ** 2, axis=-1)
+    grad = 2.0 * (w - x) / DIM
+    return {"w": w - 0.05 * grad}, opt_state, {"loss": loss}
+
+
+def _training_batch(node_ids, step):
+    rows = [np.random.default_rng(abs(hash((u, step))) % 2**32)
+            .normal(size=DIM).astype(np.float32) for u in node_ids]
+    return {"x": jnp.asarray(np.stack(rows))}
+
+
+def _training_loop(sim):
+    from repro.optim.optimizers import sgd
+    ctl = OverlayController(sim, capacity=8)
+    return SlotTrainLoop(ctl, local_step=masked_local_step(_training_step),
+                         make_params=_make_params, optimizer=sgd(0.0),
+                         make_batch=_training_batch)
+
+
+@pytest.mark.chaos
+def test_crash_resume_loss_parity(tmp_path):
+    """Kill the loop at step 6, rebuild the whole stack from scratch
+    (fresh simulator + controller, control plane replayed), restore the
+    checkpoint: steps 6..11 match the uninterrupted run's losses within
+    1e-6 and the final params bit-for-bit."""
+    plan = FaultPlan(seed=3, msg_loss=0.10)
+
+    # run A: uninterrupted
+    loop_a = _training_loop(ChaosEngine(make_sim(6), plan))
+    recs_a = loop_a.run(12)
+
+    # run B: crash after 6 steps
+    loop_b = _training_loop(ChaosEngine(make_sim(6), plan))
+    loop_b.run(6)
+    path = str(tmp_path / "crash.npz")
+    loop_b.save(path)
+    del loop_b                       # the crash
+
+    # resume: replay the control plane (same seed, same windows), then
+    # restore the training state into a brand-new loop
+    sim_c = ChaosEngine(make_sim(6), plan)
+    ctl_c = OverlayController(sim_c, capacity=8)
+    for _ in range(6):
+        ctl_c.step(1.0)
+        ctl_c.commit()
+    from repro.optim.optimizers import sgd
+    loop_c = SlotTrainLoop(ctl_c,
+                           local_step=masked_local_step(_training_step),
+                           make_params=_make_params, optimizer=sgd(0.0),
+                           make_batch=_training_batch)
+    meta = loop_c.restore(path)
+    assert meta["step"] == 6
+    recs_c = loop_c.run(6)
+
+    np.testing.assert_allclose([r.loss for r in recs_a[6:]],
+                               [r.loss for r in recs_c],
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(loop_a.params["w"]),
+                                  np.asarray(loop_c.params["w"]))
+
+
+def test_restore_rejects_occupancy_mismatch(tmp_path):
+    loop = _training_loop(make_sim(6))
+    path = str(tmp_path / "s.npz")
+    loop.save(path)
+    other = _training_loop(make_sim(5))      # different membership
+    with pytest.raises(ValueError, match="occupancy"):
+        other.restore(path)
+
+
+# --------------------------------------------------------------------------
+# Telemetry: faults land on the bus and in the round ledger
+# --------------------------------------------------------------------------
+
+def test_fault_rounds_land_in_ledger_and_bus():
+    plan = FaultPlan(seed=2, msg_loss=0.15,
+                     stragglers=(Straggler(0.0, 1e9, 3),))
+    with telemetry() as bus, round_ledger() as ledger:
+        chaos = ChaosEngine(make_sim(6), plan)
+        loop, _ = _consensus_loop(chaos, capacity=8)
+        loop.run(4)
+    assert bus.counters.get("faults.msg_dropped", 0) > 0
+    rows = ledger.rows
+    assert sum(r.faults_injected for r in rows) == \
+        sum(chaos.counts.values())
+    assert all(r.degraded_edges > 0 for r in rows)   # straggler always on
+
+
+def test_health_tracker_feeds_loop_edge_mask():
+    """A HealthTracker verdict degrades the round even without a chaos
+    engine: evicting a node zeroes its edges in the loop's mask."""
+    loop, _ = _consensus_loop(make_sim(6), capacity=8,
+                              health=HealthTracker(suspect_grace=0.0))
+    loop.health.suspect(2, now=0.0)
+    X = None
+    loop.run(1)
+    recs = loop.records
+    assert recs[-1].loss >= 0.0
+    ctl = loop.controller
+    em, degraded = loop._edge_mask(ctl.sim.now)
+    assert degraded > 0
+    s = ctl.slots.slot_of[2]
+    perms = np.asarray(ctl.schedule.perms)
+    live = [k for k in range(perms.shape[0])
+            if ctl.slots.node_at(int(perms[k, s])) not in (None, 2)]
+    assert all(em[s, k] == 0.0 for k in live)

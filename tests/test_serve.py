@@ -374,3 +374,36 @@ def test_serve_rejects_bad_configs():
     loop = _loop()
     with pytest.raises(ValueError, match="prompt length"):
         loop.submit(np.zeros(9, np.int32))
+
+
+def test_serve_deadline_eviction_frees_slot():
+    """ISSUE 10 satellite: a request past its per-slot tick budget is
+    force-retired with ``evicted=True`` and a ``serve.evictions``
+    counter, and its slot frees the same tick — a stuck generation can
+    never wedge the batch."""
+    with telemetry() as bus, round_ledger() as ledger:
+        loop = _loop(capacity=1)
+        doomed = loop.submit(np.arange(4) % CFG.vocab_size, max_new=50,
+                             max_ticks=2)
+        ok = loop.submit(np.arange(4) % CFG.vocab_size, max_new=3)
+        loop.run()
+    assert doomed.evicted
+    assert len(doomed.tokens) <= 3          # admit + 2 decode ticks max
+    # the evicted slot was reclaimed: the queued request still completes
+    assert not ok.evicted and len(ok.tokens) == 3
+    assert bus.counters["serve.evictions"] == 1
+    assert sum(r.extra.get("evicted", 0) for r in ledger.rows) == 1
+
+
+def test_serve_wall_deadline_eviction():
+    loop = _loop(capacity=2)
+    req = loop.submit(np.arange(4) % CFG.vocab_size, max_new=50,
+                      deadline_s=0.0)       # already expired on arrival
+    loop.run()
+    assert req.evicted and len(req.tokens) <= 2
+
+
+def test_serve_rejects_bad_max_ticks():
+    loop = _loop()
+    with pytest.raises(ValueError, match="max_ticks"):
+        loop.submit(np.arange(4) % CFG.vocab_size, max_ticks=0)
